@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus writes detailed rows to
+results/benchmarks/*.json).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+
+def main() -> None:
+    from benchmarks import (exp5_parallelism, fig1_qps_saturation,
+                            fig2_request_count, fig3_pd_ratio,
+                            fig4_batch_cap, fig5_qps, table2_cosim)
+    benches = [
+        ("fig1_qps_saturation", fig1_qps_saturation.run),
+        ("fig2_request_count", fig2_request_count.run),
+        ("fig3_pd_ratio", fig3_pd_ratio.run),
+        ("fig4_batch_cap", fig4_batch_cap.run),
+        ("fig5_qps", fig5_qps.run),
+        ("exp5_parallelism", exp5_parallelism.run),
+        ("table2_cosim", table2_cosim.run),
+    ]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches:
+        try:
+            rows, derived, us = fn()
+            print(f"{name},{us:.0f},{derived}")
+            payload = rows if isinstance(rows, (list, dict)) else str(rows)
+            (RESULTS / f"{name}.json").write_text(
+                json.dumps({"rows": payload, "derived": derived,
+                            "us_per_call": us}, indent=1, default=str))
+        except Exception:
+            failed += 1
+            print(f"{name},-1,ERROR")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: estimate the energy and carbon cost of an LLM serving
+workload in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+from repro.core import PowerModel, emissions
+from repro.core.power import DEVICES
+from repro.sim import PAPER_DEFAULT, energy_report, run_simulation
+
+# 1. Configure: Meta-Llama-3-8B on one A100, paper Table 1a defaults
+cfg = dataclasses.replace(
+    PAPER_DEFAULT,
+    workload=dataclasses.replace(PAPER_DEFAULT.workload, n_requests=512))
+
+# 2. Simulate the serving cluster (continuous batching, Poisson arrivals)
+result = run_simulation(cfg)
+print(f"served {len(result.requests)} requests in "
+      f"{result.stages.total_duration():.0f} s "
+      f"({result.throughput_qps():.2f} QPS, avg MFU {result.avg_mfu():.2f})")
+lat = result.latency_stats()
+print(f"TTFT p50 {lat['ttft_p50_s']:.2f} s   e2e p50 {lat['e2e_p50_s']:.2f} s")
+
+# 3. Energy (paper Eqs. 1-3): MFU -> power -> Wh, with datacenter PUE
+rep = energy_report(result, pue=1.2)
+print(f"avg power {rep.avg_power_w:.0f} W   energy {rep.energy_wh:.1f} Wh "
+      f"({rep.gpu_hours:.2f} GPU-hours)")
+
+# 4. Carbon (paper Eq. 4): grid intensity + embodied
+carbon = emissions(rep.energy_wh, rep.gpu_hours, DEVICES["a100"], ci=400.0)
+print(f"emissions: {carbon.operational_g:.1f} g operational + "
+      f"{carbon.embodied_g:.1f} g embodied = {carbon.total_g:.1f} gCO2")
+
+# 5. Same workload on a TPU v5e deployment (hardware adaptation).
+#    8B bf16 weights exceed one v5e's 16 GB, so serve with TP=4.
+tpu_cfg = dataclasses.replace(cfg, device="tpu-v5e", tp=4)
+tpu_rep = energy_report(run_simulation(tpu_cfg), pue=1.1)
+print(f"tpu-v5e x4 (TP=4): avg power {tpu_rep.avg_power_w:.0f} W/chip   "
+      f"energy {tpu_rep.energy_wh:.1f} Wh")

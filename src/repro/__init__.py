@@ -1,0 +1,6 @@
+"""repro: energy- and carbon-aware LLM inference/training framework (JAX).
+
+Reproduction and extension of "Quantifying the Energy Consumption and
+Carbon Emissions of LLM Inference via Simulations" (Özcan et al., 2025).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,409 @@
+"""Post-SPMD HLO analysis: collective byte accounting + roofline terms.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not
+collective traffic; we parse the optimized HLO text and sum the *result*
+sizes of every collective op.
+
+Loop awareness: the layer scan compiles to a ``while`` whose body appears
+once in the text but executes n_layers times. We build the computation
+graph (entry -> while bodies, recursively), extract trip counts from the
+loop-condition constants, and multiply each body's collective bytes by
+its trip count — so a per-layer all-reduce is charged L times.
+
+Byte convention: for each collective we record result bytes, and the
+roofline converts to link traffic with the standard per-algorithm factors
+(ring all-reduce 2x, all-gather/reduce-scatter 1x, etc.).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_WHILE_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"\bcall\(.*?to_apply=%?([\w.\-]+)")
+_CALLS_ATTR_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(
+    r"\bconditional\(.*?(?:branch_computations=\{([^}]*)\}|"
+    r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+))")
+
+
+def _control_edges(line):
+    """Returns list of ("while", cond, body) / ("call", comp) /
+    ("cond", [branches]) edges found on an HLO line."""
+    out = []
+    wm = _WHILE_RE.search(line)
+    if wm:
+        out.append(("while", wm.group(1), wm.group(2)))
+    cm = _CALL_RE.search(line)
+    if cm:
+        out.append(("call", cm.group(1)))
+    dm = _COND_RE.search(line)
+    if dm:
+        if dm.group(1):
+            branches = [b.strip().lstrip("%") for b in dm.group(1).split(",")]
+        else:
+            branches = [dm.group(2), dm.group(3)]
+        out.append(("cond", branches))
+    return out
+
+
+def _shape_bytes_in(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if (line and not line.startswith(" ")
+                and not line.startswith("HloModule")
+                and line.rstrip().endswith("{") and "->" in line):
+            header = line.strip()
+            if header.startswith("ENTRY "):
+                header = header[len("ENTRY "):]
+            cur = header.split("(")[0].strip().lstrip("%")
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _collective_result_bytes(line: str) -> Tuple[str, int]:
+    """Returns (kind, result_bytes) or ("", 0)."""
+    if "=" not in line:
+        return "", 0
+    lhs, rhs = line.split("=", 1)
+    rhs_stripped = rhs.lstrip()
+    for kind in COLLECTIVES:
+        # result shapes precede the op name on the RHS
+        idx = rhs_stripped.find(f" {kind}(")
+        start_idx = rhs_stripped.find(f" {kind}-start(")
+        if idx < 0 and start_idx < 0:
+            continue
+        if "-done(" in rhs_stripped:
+            return "", 0  # async done op: shapes already counted at -start
+        pos = idx if idx >= 0 else start_idx
+        result_part = rhs_stripped[:pos]
+        return kind, _shape_bytes_in(result_part)
+    return "", 0
+
+
+def collective_bytes(hlo_text: str, default_trip: int = 1) -> Dict[str, float]:
+    """Loop-aware collective byte totals per kind."""
+    comps = _split_computations(hlo_text)
+
+    # per-computation raw tallies + while edges
+    raw: Dict[str, Dict[str, float]] = {}
+    edges: Dict[str, List[Tuple[str, str]]] = {}  # comp -> [(cond, body)]
+    for name, lines in comps.items():
+        tally = {k: 0.0 for k in COLLECTIVES}
+        tally["count"] = 0
+        e = []
+        for line in lines:
+            kind, nbytes = _collective_result_bytes(line)
+            if kind:
+                tally[kind] += nbytes
+                tally["count"] += 1
+            e.extend(_control_edges(line))
+        raw[name] = tally
+        edges[name] = e
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = [int(c) for l in lines for c in _CONST_RE.findall(l)]
+        big = [c for c in consts if 1 < c < 1_000_000]
+        return max(big) if big else default_trip
+
+    # entry computation: the one not referenced as any cond/body and with
+    # the most lines (XLA names it main.* / ENTRY)
+    referenced = set()
+    for es in edges.values():
+        for ed in es:
+            if ed[0] == "while":
+                referenced.update((ed[1], ed[2]))
+            elif ed[0] == "call":
+                referenced.add(ed[1])
+            else:
+                referenced.update(ed[1])
+    entry_candidates = [n for n in comps if n not in referenced
+                        and ("main" in n or "ENTRY" in n)]
+    entry = entry_candidates[0] if entry_candidates else max(
+        comps, key=lambda n: len(comps[n]))
+
+    total = {k: 0.0 for k in COLLECTIVES}
+    total["count"] = 0
+
+    def accumulate(comp: str, mult: float):
+        if comp not in raw:
+            return
+        for k in COLLECTIVES:
+            total[k] += raw[comp][k] * mult
+        total["count"] += raw[comp]["count"] * mult
+        for ed in edges.get(comp, []):
+            if ed[0] == "while":
+                accumulate(ed[2], mult * trip_count(ed[1]))
+            elif ed[0] == "call":
+                accumulate(ed[1], mult)
+            else:  # conditional: charge the average branch (approximation)
+                for b in ed[1]:
+                    accumulate(b, mult / max(len(ed[1]), 1))
+
+    accumulate(entry, 1.0)
+    total["total"] = sum(total[k] for k in COLLECTIVES)
+    # link-traffic estimate with per-algorithm factors (ring collectives)
+    total["link_bytes"] = (2.0 * total["all-reduce"] + total["all-gather"]
+                          + total["reduce-scatter"] + total["all-to-all"]
+                          + total["collective-permute"])
+    return total
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware FLOPs and HBM-traffic accounting
+#
+# cost_analysis() counts while-loop bodies ONCE; with scan-over-layers and
+# gradient accumulation that understates FLOPs by ~L x ga. We re-derive
+# dot FLOPs and a HBM-traffic proxy per computation and scale by loop trip
+# counts (same machinery as collective_bytes).
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_DOT_RE = re.compile(
+    r"dot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\s*\)(.*)$")
+_DIMS_ATTR_RE = re.compile(r"(\w+)=\{([0-9,]*)\}")
+_RESULT_SHAPE_RE = re.compile(
+    r"^(?:\()?(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_SKIP_OPS = ("parameter(", "constant(", "bitcast(", "tuple(",
+             "get-tuple-element(", "while(", "conditional(", "call(",
+             "after-all(", "partition-id(", "replica-id(")
+
+# excluded from the HBM-traffic proxy: converts/copies are predominantly
+# XLA-CPU float-normalization artifacts (bf16 upcasts) that do not exist
+# in a native-bf16 TPU executable
+_SKIP_BYTES_OPS = _SKIP_OPS + ("convert(", "copy(", "copy-start(",
+                               "copy-done(", "wrapped_convert")
+
+
+def _operand_names(rhs: str):
+    """Names inside the op's first (...) argument list."""
+    try:
+        start = rhs.index("(")
+    except ValueError:
+        return []
+    depth = 0
+    end = start
+    for i in range(start, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", rhs[start:end])
+
+
+def _parse_shape_dims(dims: str):
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, None
+    return m.group(1), _parse_shape_dims(m.group(2))
+
+
+def _dus_fusion_update_bytes(comps) -> Dict[str, float]:
+    """Fused computations whose ROOT is dynamic-update-slice: in-place on
+    TPU, so traffic is only the update slice. Returns comp -> update bytes."""
+    out = {}
+    for name, lines in comps.items():
+        shapes = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            var, rhs = dm.group(1), dm.group(2)
+            dt, dims = _first_shape(rhs)
+            if dt is not None:
+                shapes[var] = (dt, dims)
+            if "dynamic-update-slice(" in rhs and " fusion(" not in rhs:
+                # a DUS anywhere in a fused computation makes the fusion
+                # in-place on TPU (the surrounding converts are CPU-only
+                # bf16-normalization artifacts)
+                ops = _operand_names(rhs)
+                upd = shapes.get(ops[1]) if len(ops) > 1 else None
+                if upd is not None:
+                    n = 1
+                    for d in upd[1]:
+                        n *= d
+                    out[name] = max(out.get(name, 0.0),
+                                    n * _DTYPE_BYTES[upd[0]])
+                else:
+                    out.setdefault(name, 0.0)
+    return out
+
+
+def program_stats(hlo_text: str, default_trip: int = 1) -> Dict[str, float]:
+    """Loop-aware {dot_flops, hbm_bytes, dot_count} for the whole program."""
+    comps = _split_computations(hlo_text)
+    dus_fusions = _dus_fusion_update_bytes(comps)
+
+    # symbol tables + per-comp raw stats + while edges
+    comp_stats: Dict[str, Dict[str, float]] = {}
+    edges: Dict[str, List[Tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        shapes: Dict[str, Tuple[str, List[int]]] = {}
+        pending = []  # (lhs_name, rhs_name, attrs, result_numel)
+        flops = 0.0
+        bytes_rw = 0.0
+        ndots = 0
+        e = []
+        op_lines = []
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            var, rhs = dm.group(1), dm.group(2)
+            dt, dims = _first_shape(rhs)
+            if dt is not None:
+                shapes[var] = (dt, dims)
+            ces = _control_edges(line)
+            if ces:
+                e.extend(ces)
+                continue
+            if "parameter(" not in rhs and any(op in rhs for op in _SKIP_OPS):
+                continue
+            op_lines.append((rhs, dt, dims))
+            dmt = _DOT_RE.search(rhs)
+            if dmt:
+                pending.append((dmt.group(1), dmt.group(3), dt, dims))
+                ndots += 1
+
+        def nbytes(dt, dims):
+            if dt is None:
+                return 0
+            n = 1
+            for d in dims:
+                n *= d
+            return n * _DTYPE_BYTES[dt]
+
+        # HBM-traffic proxy: every unique materialized value is written
+        # once and read ~once (2x result bytes); computation parameters are
+        # read once; dynamic-update-slice moves only its update slice
+        # (in-place on TPU). Convert/copy results are excluded as XLA-CPU
+        # bf16-upcast artifacts.
+        param_bytes = 0.0
+        for rhs, dt, dims in op_lines:
+            if "parameter(" in rhs:
+                param_bytes += nbytes(dt, dims)
+                continue
+            if any(op in rhs for op in _SKIP_BYTES_OPS):
+                continue
+            if "dynamic-update-slice(" in rhs:
+                ops = _operand_names(rhs)
+                upd = shapes.get(ops[1]) if len(ops) > 1 else None
+                bytes_rw += 2 * (nbytes(*upd) if upd else 0)
+                continue
+            if " fusion(" in rhs:
+                cm = _CALLS_ATTR_RE.search(rhs)
+                if cm and cm.group(1) in dus_fusions:
+                    bytes_rw += 2 * dus_fusions[cm.group(1)]
+                    continue
+            bytes_rw += 2 * nbytes(dt, dims)
+        for lhs_name, attrs, rdt, rdims in pending:
+            lhs = shapes.get(lhs_name)
+            if lhs is None or rdt is None:
+                continue
+            contract = []
+            for key, val in _DIMS_ATTR_RE.findall(attrs):
+                if key == "lhs_contracting_dims":
+                    contract = _parse_shape_dims(val)
+            csize = 1
+            for ci in contract:
+                if ci < len(lhs[1]):
+                    csize *= lhs[1][ci]
+            rn = 1
+            for d in rdims:
+                rn *= d
+            flops += 2.0 * rn * csize
+        comp_stats[name] = {"dot_flops": flops, "hbm_bytes": bytes_rw,
+                            "param_bytes": param_bytes,
+                            "dot_count": float(ndots)}
+        edges[name] = e
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = [int(c) for l in lines for c in _CONST_RE.findall(l)]
+        big = [c for c in consts if 1 < c < 1_000_000]
+        return max(big) if big else default_trip
+
+    referenced = set()
+    for es in edges.values():
+        for ed in es:
+            if ed[0] == "while":
+                referenced.update((ed[1], ed[2]))
+            elif ed[0] == "call":
+                referenced.add(ed[1])
+            else:
+                referenced.update(ed[1])
+    entry_candidates = [n for n in comps if n not in referenced
+                        and ("main" in n or "ENTRY" in n)]
+    entry = entry_candidates[0] if entry_candidates else max(
+        comps, key=lambda n: len(comps[n]))
+
+    total = {"dot_flops": 0.0, "hbm_bytes": 0.0, "dot_count": 0.0}
+
+    # while bodies/conds receive loop-carried state as parameters — not
+    # fresh HBM reads (in-body dynamic-slices count the real traffic)
+    loop_comps = set()
+    for es in edges.values():
+        for ed in es:
+            if ed[0] == "while":
+                loop_comps.update((ed[1], ed[2]))
+
+    def accumulate(comp: str, mult: float):
+        if comp not in comp_stats:
+            return
+        for k in total:
+            total[k] += comp_stats[comp][k] * mult
+        if comp not in loop_comps:
+            total["hbm_bytes"] += comp_stats[comp]["param_bytes"] * mult
+        for ed in edges.get(comp, []):
+            if ed[0] == "while":
+                accumulate(ed[2], mult * trip_count(ed[1]))
+            elif ed[0] == "call":
+                accumulate(ed[1], mult)
+            else:
+                for b in ed[1]:
+                    accumulate(b, mult / max(len(ed[1]), 1))
+
+    accumulate(entry, 1.0)
+    return total

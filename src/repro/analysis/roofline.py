@@ -1,0 +1,192 @@
+"""Roofline analysis over dry-run records (deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+  compute term    = HLO_dot_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = link_bytes_per_device / link_bw
+
+(The post-SPMD HLO is a per-device program, so per-device quantities
+divided by per-chip rates equal the global-quantity/(chips x rate) form.)
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (inference) with N_active for MoE
+plus context-dependent attention-score FLOPs; the MODEL/HLO ratio flags
+remat and dispatch overheads.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.core.power import TPU_V5E
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+PEAK = TPU_V5E.peak_flops          # 197e12
+HBM_BW = TPU_V5E.hbm_bw            # 819e9
+LINK_BW = TPU_V5E.link_bw          # 50e9
+HBM_CAP = TPU_V5E.hbm_bytes        # 16e9
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        per_tok = 3.0 * cfg.flops_per_token_total(shape.seq_len // 2)
+        _ = 6.0 * n_act * tokens  # classic 6ND (proj-only) for reference
+        return per_tok * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return cfg.flops_per_token_total(shape.seq_len // 2) * tokens / n_devices
+    # decode: one token per sequence against a seq_len cache
+    tokens = shape.global_batch
+    return cfg.flops_per_token_total(shape.seq_len) * tokens / n_devices
+
+
+def ideal_bytes_per_device(arch: str, shape_name: str, chips: int) -> float:
+    """Algorithmic HBM-traffic floor per device: weight shard read once
+    per pass, KV cache read/written once, one residual-stream activation
+    round-trip per layer."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    p_bytes = cfg.param_count() * 2            # bf16 weights
+    n_act = cfg.active_param_count() * 2
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / max(chips / 16, 1)
+        # fwd + bwd weight reads (fp32 master + moments) + grad write
+        w = (cfg.param_count() * (4 * 3 + 8 * 2)) / chips
+        acts = tokens_dev * cfg.d_model * 2 * cfg.n_layers * 2
+        return w + acts
+    if shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / max(chips / 16, 1)
+        w = n_act / 16                          # TP shard read once
+        kv = tokens_dev * cfg.kv_bytes_per_token()
+        acts = tokens_dev * cfg.d_model * 2 * cfg.n_layers * 2
+        return w + kv + acts
+    # decode
+    w = n_act / 16
+    a = cfg.attention
+    ctx = shape.seq_len
+    if a is not None and a.sliding_window:
+        ctx = min(ctx, a.sliding_window)
+    kv_dev = (shape.global_batch * ctx * cfg.kv_bytes_per_token()
+              / max(chips / 16, 1))
+    return w + kv_dev
+
+
+def cpu_fp32_artifact_bytes(hlo_path: Path) -> float:
+    """Estimate CPU float-normalization doubling: f32 buffers that have an
+    identically-shaped bf16 twin (XLA CPU upcasts bf16 compute)."""
+    if not hlo_path.exists():
+        return 0.0
+    text = hlo_path.read_text()
+    f32 = set(re.findall(r"f32\[([0-9,]+)\]", text))
+    bf16 = set(re.findall(r"bf16\[([0-9,]+)\]", text))
+    dup = 0
+    for dims in f32 & bf16:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 > 50e6:  # only large buffers matter
+            dup += n * 4
+    return float(dup)
+
+
+def analyze_cell(rec: Dict, hlo_path: Optional[Path] = None) -> Dict:
+    la = rec["loop_aware"]
+    coll = rec["collectives"]
+    mem = rec["memory"]
+    n_dev = rec["n_devices"]
+    # the mesh uses 256 (single pod) or 512 (multi pod) of the forced 512
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+
+    t_comp = la["dot_flops"] / PEAK
+    t_mem = la["hbm_bytes"] / HBM_BW
+    t_coll = coll["link_bytes"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    ib = ideal_bytes_per_device(rec["arch"], rec["shape"], chips)
+    # the achievable floor is itself a roofline: max(compute, memory) ideal
+    t_ideal = max(mf / PEAK, ib / HBM_BW, 1e-12)
+    t_bound = max(t_comp, t_mem, t_coll)
+    artifact = cpu_fp32_artifact_bytes(hlo_path) if hlo_path else 0.0
+    temp = mem.get("temp_bytes") or 0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": la["dot_flops"],
+        "ideal_bytes_per_dev": ib,
+        "hlo_bytes_per_dev": la["hbm_bytes"],
+        "useful_ratio": mf / max(la["dot_flops"], 1e-9),
+        "t_ideal_s": t_ideal,
+        "roofline_fraction": t_ideal / max(t_bound, 1e-12),
+        "temp_bytes": temp,
+        "temp_bytes_tpu_est": max(temp - artifact, 0),
+        "argument_bytes": mem.get("argument_bytes") or 0,
+        "fits_hbm": (max(temp - artifact, 0)
+                     + (mem.get("argument_bytes") or 0)) < HBM_CAP * 1.05,
+    }
+
+
+def load_all(mesh: str = "16x16", reparse: bool = True) -> List[Dict]:
+    out = []
+    for p in sorted((RESULTS / mesh).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if not rec.get("runnable", False) or "loop_aware" not in rec:
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh", mesh), "skipped": True,
+                        "reason": rec.get("reason", rec.get("error", ""))[:90]})
+            continue
+        hlo_path = p.with_suffix(".hlo.txt")
+        if reparse and hlo_path.exists():
+            # recompute with the current parser (JSONs may be stale)
+            from repro.analysis.hlo import collective_bytes, program_stats
+            text = hlo_path.read_text()
+            trip = get_config(rec["arch"]).n_layers
+            rec["loop_aware"] = program_stats(text, default_trip=trip)
+            rec["collectives"] = collective_bytes(text, default_trip=trip)
+        out.append(analyze_cell(rec, hlo_path))
+    return out
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "dominant | MODEL/HLO | roofline frac | fits 16G |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for c in cells:
+        if c.get("skipped"):
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped: {c['reason'][:40]} | — | — | — |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute_s']*1e3:.2f} | "
+            f"{c['t_memory_s']*1e3:.2f} | {c['t_collective_s']*1e3:.2f} | "
+            f"{c['dominant']} | {c['useful_ratio']:.2f} | "
+            f"{c['roofline_fraction']:.3f} | "
+            f"{'yes' if c['fits_hbm'] else 'NO'} |")
+    return "\n".join(rows)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    cells = load_all(args.mesh)
+    if args.json:
+        print(json.dumps(cells, indent=1))
+    else:
+        print(markdown_table(cells))
+
+
+if __name__ == "__main__":
+    main()

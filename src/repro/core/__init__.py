@@ -1,0 +1,15 @@
+from repro.core.power import DEVICES, DeviceProfile, PowerModel, power
+from repro.core.energy import EnergyReport, operational_energy, stage_mfu
+from repro.core.carbon import CarbonReport, emissions
+from repro.core.signals import Signal, aggregate_power
+from repro.core.microgrid import BatteryConfig, MicrogridConfig, simulate, summarize
+from repro.core.cosim import CosimResult, run_cosim, stages_to_load_signal
+
+__all__ = [
+    "DEVICES", "DeviceProfile", "PowerModel", "power",
+    "EnergyReport", "operational_energy", "stage_mfu",
+    "CarbonReport", "emissions",
+    "Signal", "aggregate_power",
+    "BatteryConfig", "MicrogridConfig", "simulate", "summarize",
+    "CosimResult", "run_cosim", "stages_to_load_signal",
+]

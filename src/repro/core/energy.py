@@ -1,0 +1,61 @@
+"""Operational energy accounting (paper Eqs. 2-3).
+
+    MFU_i = (FLOPs_MLP(i) + FLOPs_Attn(i)) / (DeviceFLOPs * t_i)
+    G     = R * TP * PP                      (GPUs per deployment)
+    H_i   = dt_i / 3600 * G                  (GPU-hours of stage i)
+    E_op  = sum_i P(MFU_i) * H_i * PUE       (Wh)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.power import DeviceProfile, PowerModel
+
+
+@dataclasses.dataclass
+class EnergyReport:
+    energy_wh: float
+    gpu_hours: float
+    avg_power_w: float          # duration-weighted mean per-GPU power
+    peak_power_w: float
+    avg_mfu: float
+    duration_s: float
+    n_devices: int
+    pue: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def stage_mfu(flops_mlp: np.ndarray, flops_attn: np.ndarray,
+              stage_dur_s: np.ndarray, device: DeviceProfile,
+              n_devices: int = 1) -> np.ndarray:
+    """Eq. 2 (as a fraction, not percent)."""
+    total = np.asarray(flops_mlp, np.float64) + np.asarray(flops_attn, np.float64)
+    dt = np.maximum(np.asarray(stage_dur_s, np.float64), 1e-12)
+    return total / (device.peak_flops * dt * n_devices)
+
+
+def operational_energy(mfu: np.ndarray, stage_dur_s: np.ndarray,
+                       power_model: PowerModel, n_devices: int = 1,
+                       pue: float = 1.0) -> EnergyReport:
+    """Eq. 3. mfu per stage (fraction), durations in seconds."""
+    mfu = np.asarray(mfu, np.float64)
+    dt = np.asarray(stage_dur_s, np.float64)
+    p = np.asarray(power_model.power(mfu))                   # W per device
+    wh = float(np.sum(p * dt) / 3600.0 * n_devices * pue)
+    dur = float(dt.sum())
+    gpu_h = dur / 3600.0 * n_devices
+    return EnergyReport(
+        energy_wh=wh,
+        gpu_hours=gpu_h,
+        avg_power_w=float(np.sum(p * dt) / max(dur, 1e-12)),
+        peak_power_w=float(p.max()) if len(p) else 0.0,
+        avg_mfu=float(np.sum(mfu * dt) / max(dur, 1e-12)),
+        duration_s=dur,
+        n_devices=n_devices,
+        pue=pue,
+    )

@@ -1,0 +1,3 @@
+from repro.distributed.axes import axis_env, constrain, default_mapping, logical_to_spec
+
+__all__ = ["axis_env", "constrain", "default_mapping", "logical_to_spec"]

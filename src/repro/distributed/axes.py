@@ -1,0 +1,80 @@
+"""Logical-axis sharding environment.
+
+Model code is mesh-agnostic: it annotates intermediates with *logical*
+axis names via ``constrain(x, ("batch", "seq", "embed"))``. The launcher
+activates an environment mapping logical names to physical mesh axes
+(e.g. batch -> ("pod", "data"), heads/mlp/expert -> "model"). Outside an
+active environment ``constrain`` is a no-op, so the same model code runs
+single-device on CPU and multi-pod under pjit.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+def _current() -> Optional[dict]:
+    return getattr(_state, "env", None)
+
+
+@contextlib.contextmanager
+def axis_env(mesh: Mesh, mapping: Dict[str, AxisName]):
+    """Activate a logical->physical axis mapping for the enclosed trace."""
+    prev = _current()
+    _state.env = {"mesh": mesh, "map": dict(mapping)}
+    try:
+        yield
+    finally:
+        _state.env = prev
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...],
+                    mapping: Dict[str, AxisName]) -> P:
+    phys = []
+    used = set()
+    for a in axes:
+        m = mapping.get(a) if a is not None else None
+        # a physical axis may appear at most once in a PartitionSpec
+        if m is not None:
+            flat = (m,) if isinstance(m, str) else tuple(m)
+            flat = tuple(f for f in flat if f not in used)
+            used.update(flat)
+            m = flat if len(flat) > 1 else (flat[0] if flat else None)
+        phys.append(m)
+    return P(*phys)
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    """Apply a logical sharding constraint if an axis env is active."""
+    env = _current()
+    if env is None:
+        return x
+    spec = logical_to_spec(axes, env["map"])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(env["mesh"], spec))
+
+
+# Default logical-axis mapping for the production meshes.
+def default_mapping(multi_pod: bool = False) -> Dict[str, AxisName]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,           # sequence usually unsharded (SP for long_500k)
+        "embed": None,
+        "heads": "model",
+        "head_dim": None,
+        "kv_heads": None,      # replicated when they don't divide TP
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "capacity": batch,
+        "layers": None,
+    }

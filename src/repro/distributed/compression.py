@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod reduction: int8 quantization with
+error feedback (1-bit-Adam-style residual carrying).
+
+At 1000+ node scale the data-parallel gradient reduce-scatter crosses the
+slow inter-pod links; 8-bit block-quantized gradients cut that traffic 4x
+(fp32) / 2x (bf16) with the residual error fed back into the next step so
+the compression bias vanishes in expectation.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype
+                    ) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads, residuals=None):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (quantized tree of (q, scale), new residuals)."""
+    if residuals is None:
+        residuals = jax.tree.map(jnp.zeros_like, grads)
+
+    def one(g, r):
+        g_corr = g.astype(jnp.float32) + r.astype(jnp.float32)
+        q, s = quantize_int8(g_corr)
+        deq = dequantize_int8(q, s, g.shape, jnp.float32)
+        new_r = g_corr - deq
+        return (q, s), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_flatten(residuals)[0]
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    rtree = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return qtree, rtree
+
+
+def decompress_tree(qtree, like):
+    flat_q, treedef = jax.tree_util.tree_flatten(
+        qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and hasattr(x[0], "dtype"))
+    flat_l = jax.tree_util.tree_flatten(like)[0]
+    out = [dequantize_int8(q, s, l.shape, l.dtype)
+           for (q, s), l in zip(flat_q, flat_l)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,57 @@
+"""Elastic scaling: re-mesh and re-shard live state when the device pool
+changes (node failure or capacity growth).
+
+The checkpoint layout is device-count-independent (host numpy leaves), so
+elasticity reduces to: gather -> rebuild mesh/plan for the new topology ->
+re-place. ``reshard_tree`` performs the live device-to-device path when
+both meshes coexist; ``ElasticContext.on_change`` falls back to the
+checkpoint path when they don't.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import make_plan, param_pspecs
+
+
+def reshard_tree(tree, new_spec_tree, new_mesh: Mesh):
+    """Re-place a pytree onto a new mesh (gathers to host if needed)."""
+    def one(x, spec):
+        sh = NamedSharding(new_mesh, spec)
+        try:
+            return jax.device_put(x, sh)
+        except Exception:
+            return jax.device_put(np.asarray(x), sh)
+    return jax.tree.map(one, tree, new_spec_tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+@dataclasses.dataclass
+class ElasticContext:
+    """Tracks the active mesh; rebuilds plans when the pool changes."""
+    cfg: "ModelConfig"
+    kind: str
+    mesh: Mesh
+    plan: object = None
+
+    def __post_init__(self):
+        self.plan = make_plan(self.cfg, self.mesh, self.kind)
+
+    def on_change(self, new_mesh: Mesh, params, opt_state=None):
+        """Re-shard live training state onto ``new_mesh``."""
+        new_plan = make_plan(self.cfg, new_mesh, self.kind)
+        p_abs = jax.eval_shape(lambda t: t, params)
+        specs = param_pspecs(p_abs, new_plan.mapping)
+        params = reshard_tree(params, specs, new_mesh)
+        if opt_state is not None:
+            o_specs = {"mu": specs, "nu": specs,
+                       "step": jax.sharding.PartitionSpec()}
+            opt_state = reshard_tree(opt_state, o_specs, new_mesh)
+        self.mesh = new_mesh
+        self.plan = new_plan
+        return params, opt_state

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     window: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """Model layout: q (B, 1, H, D); caches (B, W, KV, D); lengths (B,).
+    Returns (B, 1, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, one, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qk = q.reshape(B, KV, G, D)
+    kk = k_cache.transpose(0, 2, 1, 3)
+    vk = v_cache.transpose(0, 2, 1, 3)
+    out = decode_attention_pallas(qk, kk, vk, lengths, window=window,
+                                  interpret=interpret)
+    return out.reshape(B, 1, H, D)

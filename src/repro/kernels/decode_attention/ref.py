@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_reference(q, k_cache, v_cache, lengths, *,
+                               window: Optional[int] = None):
+    """q: (B, KV, G, D); caches: (B, KV, W, D); lengths: (B,)."""
+    B, KV, G, D = q.shape
+    W = k_cache.shape[2]
+    s = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    slot = jnp.arange(W)[None, :]
+    if window is None:
+        valid = slot < lengths[:, None]
+    else:
+        valid = slot < jnp.minimum(lengths, window)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

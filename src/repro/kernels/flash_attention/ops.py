@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Selects interpret mode automatically off-TPU and handles head-dim padding
+to MXU-friendly multiples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """q: (B, S, H, D); k/v: (B, S, KV, D) (model layout). -> (B, S, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, D = q.shape
+    # kernel layout: heads-major
+    qk = q.transpose(0, 2, 1, 3)
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    # pad head_dim to a multiple of 128 for MXU alignment on TPU
+    Dp = max(128, -(-D // 128) * 128) if not interpret else D
+    if Dp != D:
+        pad = ((0, 0), (0, 0), (0, 0), (0, Dp - D))
+        qk, kk, vk = jnp.pad(qk, pad), jnp.pad(kk, pad), jnp.pad(vk, pad)
+        # padded q/k dims change the softmax scale; rescale q to compensate
+        qk = qk * (jnp.sqrt(Dp / D).astype(qk.dtype))
+    out = flash_attention_pallas(qk, kk, vk, causal=causal, window=window,
+                                 interpret=interpret)
+    out = out[..., :D]
+    return out.transpose(0, 2, 1, 3)

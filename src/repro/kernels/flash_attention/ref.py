@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B, H, S, D); k/v: (B, KV, S, D). Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    group = H // KV
+    qg = q.reshape(B, KV, group, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", w, vf)
+    return o.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the GLA scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gla_scan.kernel import gla_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "chunk", "interpret"))
+def gla_scan(q, k, v, log_w, u: Optional[jnp.ndarray] = None,
+             mode: str = "ssd", chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Model layout q/k/log_w: (B, T, H, K); v: (B, T, H, V).
+    Returns (o (B, T, H, V), final_state (B, H, K, V))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    o, s = gla_scan_pallas(tr(q), tr(k), tr(v), tr(log_w), u=u, mode=mode,
+                           chunk=chunk, interpret=interpret)
+    return tr(o), s

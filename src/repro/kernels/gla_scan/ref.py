@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the GLA scan kernel: exact token-by-token scan."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.linear_attention import gla_reference
+
+
+def gla_scan_reference(q, k, v, log_w, u: Optional[jnp.ndarray] = None,
+                       mode: str = "ssd"):
+    """Kernel layout (B, H, T, ·) -> delegates to the model-layer oracle
+    (which uses (B, T, H, ·))."""
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    o, s = gla_reference(tr(q), tr(k), tr(v), tr(log_w), u=u, mode=mode)
+    return tr(o), s

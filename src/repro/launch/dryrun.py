@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes any jax
+import). Single cell:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k [--multi-pod]
+
+Orchestrate all cells (sequential subprocesses, resumable):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             attn_impl: str = "auto", out_path: Path = None,
+             variant: str = "baseline", grad_accum=None) -> dict:
+    import jax
+    from repro.analysis.hlo import collective_bytes, program_stats
+    from repro.configs import cell_is_runnable, get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_is_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "runnable": ok, "reason": reason, "attn_impl": attn_impl,
+           "variant": variant}
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    plan, fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh,
+                                               attn_impl=attn_impl,
+                                               variant=variant,
+                                               grad_accum=grad_accum)
+    jit_kwargs = dict(in_shardings=in_sh)
+    if out_sh is not None:
+        jit_kwargs["out_shardings"] = out_sh
+    if shape.kind == "decode":
+        jit_kwargs["donate_argnums"] = (2,)   # cache updated in place
+    elif shape.kind == "train":
+        jit_kwargs["donate_argnums"] = (0, 1)  # params + opt state
+    with mesh:
+        lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, default_trip=cfg.n_layers)
+    stats = program_stats(hlo, default_trip=cfg.n_layers)
+
+    rec.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+        "loop_aware": stats,
+        "n_devices": len(jax.devices()),
+        "hlo_chars": len(hlo),
+    })
+    if out_path is not None:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        # keep the HLO for §Perf iteration analysis (collectives, remat)
+        (out_path.with_suffix(".hlo.txt")).write_text(hlo[:40_000_000])
+    return rec
+
+
+def orchestrate(multi_pod: bool, attn_impl: str, only_missing: bool = True,
+                timeout: int = 3600):
+    from repro.configs import all_cells
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    outdir = RESULTS / mesh_tag
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch, shape_name, ok, reason in all_cells():
+        out_path = outdir / f"{arch}__{shape_name}.json"
+        if only_missing and out_path.exists():
+            rec = json.loads(out_path.read_text())
+            if rec.get("runnable") is False or "compile_s" in rec or "error" not in rec:
+                print(f"[skip existing] {arch} {shape_name}")
+                continue
+        if not ok:
+            out_path.write_text(json.dumps(
+                {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                 "runnable": False, "reason": reason}, indent=1))
+            print(f"[skip n/a] {arch} {shape_name}: {reason}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape_name,
+               "--attn-impl", attn_impl]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        print(f"[run] {arch} {shape_name} ({mesh_tag})", flush=True)
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=timeout,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            if r.returncode != 0:
+                failures.append((arch, shape_name, r.stderr[-3000:]))
+                out_path.write_text(json.dumps(
+                    {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                     "runnable": True, "error": r.stderr[-3000:]}, indent=1))
+                print(f"  FAILED in {time.time()-t0:.0f}s")
+            else:
+                print(f"  ok in {time.time()-t0:.0f}s")
+        except subprocess.TimeoutExpired:
+            failures.append((arch, shape_name, "timeout"))
+            print("  TIMEOUT")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        fails = orchestrate(args.multi_pod, args.attn_impl,
+                            only_missing=not args.force)
+        if fails:
+            print(f"{len(fails)} failures:")
+            for a, s, e in fails:
+                print(f"  {a} {s}: {e[:200]}")
+            sys.exit(1)
+        print("all cells ok")
+        return
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    if args.variant != "baseline":
+        mesh_tag = f"{mesh_tag}-{args.variant}"
+    out_path = RESULTS / mesh_tag / f"{args.arch}__{args.shape}.json"
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.attn_impl,
+                   out_path, variant=args.variant,
+                   grad_accum=args.grad_accum)
+    print(json.dumps({k: v for k, v in rec.items() if k != "hlo"}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

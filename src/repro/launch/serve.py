@@ -1,0 +1,66 @@
+"""Serving launcher: the continuous-batching engine over a selectable
+architecture, with energy accounting of the served trace.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
+        --reduced --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core import PowerModel, emissions
+from repro.core.power import DEVICES
+from repro.models import build_model
+from repro.serve.engine import ServeRequest, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--device", default="tpu-v5e")
+    ap.add_argument("--ci", type=float, default=400.0,
+                    help="grid carbon intensity gCO2/kWh")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_slots=args.slots,
+                           max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(ServeRequest(
+            rid=i, prompt=rng.integers(1, cfg.vocab_size, rng.integers(4, 17)),
+            max_new_tokens=args.new_tokens))
+    done = engine.run()
+    toks = sum(len(r.generated) for r in done)
+    print(f"{cfg.name}: {len(done)} requests, {toks} tokens, "
+          f"{toks/max(engine.clock, 1e-9):.1f} tok/s")
+
+    dev = DEVICES[args.device]
+    durs = np.array([l.dur_s for l in engine.logs])
+    flops = np.array([2.0 * cfg.param_count() * l.n_tokens
+                      for l in engine.logs])
+    mfu = np.clip(flops / (np.maximum(durs, 1e-9) * dev.peak_flops), 0, 1)
+    pm = PowerModel(dev)
+    wh = float(np.sum(np.asarray(pm.power(mfu)) * durs)) / 3600.0
+    rep = emissions(wh, engine.clock / 3600.0, dev, ci=args.ci)
+    print(f"energy {wh*1000:.2f} mWh -> {rep.total_g:.4f} gCO2 "
+          f"(CI={args.ci:.0f}, device={dev.name})")
+
+
+if __name__ == "__main__":
+    main()

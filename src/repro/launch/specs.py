@@ -1,0 +1,152 @@
+"""Abstract input specs + jit-able step builders for the dry-run and
+launchers.
+
+Everything here is ShapeDtypeStruct-based: no memory is allocated. The
+same builders power the real launchers (which replace the abstract trees
+with device arrays).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import axes as axlib
+from repro.distributed.sharding import (ShardingPlan, batch_pspecs,
+                                        cache_pspecs, make_plan, param_pspecs)
+from repro.models.lm import Model, build_model
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.trainer import make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    batch: Dict[str, Any] = {}
+    if cfg.embed_stub and shape.kind != "decode":
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    if (cfg.attention is not None and cfg.attention.rope == "mrope"
+            and shape.kind != "decode"):
+        batch["positions3"] = sds((B, S, 3), jnp.int32)
+    return batch
+
+
+def abstract_params(model: Model, dtype=jnp.float32):
+    tree = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if dtype is not None:
+        tree = jax.tree.map(
+            lambda l: sds(l.shape, dtype) if l.dtype == jnp.float32 else l,
+            tree)
+    return tree
+
+
+def abstract_cache(model: Model, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(model.init_cache, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Cell builder: (fn, abstract args, in/out shardings)
+# ---------------------------------------------------------------------------
+
+def auto_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    budget_bytes: float = 4e9,
+                    batch_axes=("pod", "data"), seq_shards: int = 1) -> int:
+    """Pick microbatch accumulation so the remat-scan's saved layer inputs
+    (L x rows_per_device x S x d bf16) fit the activation budget."""
+    n_batch_devs = 1
+    for ax in batch_axes:
+        n_batch_devs *= mesh.shape.get(ax, 1)
+    rows = max(1, shape.global_batch // n_batch_devs)
+    per_row = cfg.n_layers * shape.seq_len * cfg.d_model * 2 // seq_shards
+    ga = 1
+    while rows // ga > 1 and (rows // ga) * per_row > budget_bytes:
+        ga *= 2
+    if (rows // ga) * per_row > budget_bytes and rows // ga == 1:
+        pass  # single row still over budget: remat scan is the floor
+    return ga
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               attn_impl: str = "auto",
+               opt_cfg: Optional[AdamWConfig] = None,
+               grad_accum: Optional[int] = None,
+               donate_cache: bool = True,
+               variant: str = "baseline"):
+    """Returns (plan, fn, args, in_shardings) ready for jit().lower(*args)."""
+    plan = make_plan(cfg, mesh, "train" if shape.kind == "train" else shape.kind,
+                     shape, variant=variant)
+    c = plan.cfg
+    mapping = plan.mapping
+    batch_abs = input_specs(c, shape)
+    b_specs = plan.tree_shardings(batch_pspecs(c, mapping, batch_abs))
+
+    if shape.kind == "train":
+        model = build_model(c, attn_impl=attn_impl, remat=True)
+        p_abs = abstract_params(model, jnp.float32)
+        p_specs = plan.tree_shardings(param_pspecs(p_abs, mapping))
+        opt_abs = jax.eval_shape(lambda: adamw_init(p_abs))
+        o_specs = {"mu": p_specs, "nu": p_specs,
+                   "step": NamedSharding(mesh, P())}
+        opt_cfg = opt_cfg or AdamWConfig()
+        if grad_accum is None:
+            baxes = mapping.get("batch") or ("data",)
+            seq_ax = mapping.get("seq")
+            seq_shards = mesh.shape.get(seq_ax, 1) if seq_ax else 1
+            grad_accum = auto_grad_accum(c, shape, mesh, batch_axes=baxes,
+                                         seq_shards=seq_shards)
+        step = make_train_step(model, opt_cfg, grad_accum=grad_accum)
+
+        def fn(params, opt_state, batch):
+            with axlib.axis_env(mesh, mapping):
+                return step(params, opt_state, batch)
+
+        args = (p_abs, opt_abs, batch_abs)
+        in_sh = (p_specs, o_specs, b_specs)
+        out_sh = (p_specs, o_specs, None)
+        return plan, fn, args, in_sh, out_sh
+
+    model = build_model(c, attn_impl=attn_impl, remat=False)
+    p_abs = abstract_params(model, jnp.bfloat16)
+    p_specs = plan.tree_shardings(param_pspecs(p_abs, mapping))
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            with axlib.axis_env(mesh, mapping):
+                return model.prefill(params, batch, max_len=shape.seq_len)
+
+        args = (p_abs, batch_abs)
+        in_sh = (p_specs, b_specs)
+        return plan, fn, args, in_sh, None
+
+    # decode: one new token against a cache of seq_len
+    cache_abs = abstract_cache(model, shape.global_batch, shape.seq_len)
+    # caches carry `lengths`; pretend the cache is (seq_len - 1) full
+    c_specs = plan.tree_shardings(cache_pspecs(c, mapping, cache_abs))
+
+    def fn(params, batch, cache):
+        with axlib.axis_env(mesh, mapping):
+            return model.decode_step(params, batch, cache)
+
+    args = (p_abs, batch_abs, cache_abs)
+    in_sh = (p_specs, b_specs, c_specs)
+    out_sh = (None, c_specs)
+    return plan, fn, args, in_sh, out_sh

@@ -1,0 +1,460 @@
+"""Attention: training/prefill (chunked flash-style) and decode (KV cache).
+
+Parameters use explicit per-head 3D layouts — wq (D, H, Dh), wk/wv
+(D, KV, Dh), wo (H, Dh, D) — so tensor-parallel PartitionSpecs align with
+head boundaries without resharding. Two TP modes are supported by the
+sharding layer: "head" (shard H; KV heads replicated ``kv_repeat``x when
+KV < TP) and "head_dim" (shard Dh; for head counts that don't divide TP).
+
+Three math-identical implementations:
+  - ``einsum``  : materialized scores — tiny shapes (CPU smoke tests)
+  - ``xla``     : chunked online-softmax (flash-style) pure JAX; memory-
+                  safe at 32k+ and transparent to ``cost_analysis()`` —
+                  the dry-run/roofline path
+  - ``pallas``  : Pallas TPU kernels from ``repro.kernels`` (real-TPU path)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.distributed.axes import constrain
+from repro.models.layers import apply_mrope, apply_rope, truncated_normal_init
+
+NEG_INF = -1e30
+
+
+def attn_params(key, d_model: int, cfg: AttentionConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    import math
+    s = 1.0 / math.sqrt(d_model)
+    so = 1.0 / math.sqrt(cfg.q_dim)
+    p = {
+        "wq": truncated_normal_init(ks[0], (d_model, cfg.n_heads, cfg.head_dim), s),
+        "wk": truncated_normal_init(ks[1], (d_model, cfg.n_kv_heads, cfg.head_dim), s),
+        "wv": truncated_normal_init(ks[2], (d_model, cfg.n_kv_heads, cfg.head_dim), s),
+        "wo": truncated_normal_init(ks[3], (cfg.n_heads, cfg.head_dim, d_model), so),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, cfg.head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    return p
+
+
+def _project_qkv(x, p, cfg: AttentionConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    # "seq_inner" is never sharded: under sequence parallelism (variant
+    # "sp") the residual stream is seq-sharded but attention internals
+    # operate on the gathered sequence (Megatron-SP AG/RS placement)
+    q = constrain(q, ("batch", "seq_inner", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq_inner", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq_inner", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _apply_positional(q, k, cfg: AttentionConfig, positions):
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# Dense (einsum) attention — small shapes only
+# ---------------------------------------------------------------------------
+
+def attention_einsum(q, k, v, cfg: AttentionConfig, q_offset=0,
+                     kv_valid: Optional[jnp.ndarray] = None):
+    """q: (B,Sq,H,D), k/v: (B,Skv,KV_eff,D). Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if cfg.causal:
+        mask &= kpos <= qpos
+    if cfg.sliding_window is not None:
+        mask &= kpos > qpos - cfg.sliding_window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_valid is not None:  # (B, Skv) padding mask
+        scores = jnp.where(kv_valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (pure XLA) — the long-sequence path
+#
+# The forward is an online-softmax over kv chunks; the backward is a
+# *flash backward*: it saves only (q, k, v, out, lse) and recomputes the
+# score blocks chunk-by-chunk, so training at 32k does not materialize
+# S x S score tensors (neither forward nor backward).
+# ---------------------------------------------------------------------------
+
+def _flash_mask(cfg: AttentionConfig, qpos, kpos, seq_q, seq_k):
+    pm = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if cfg.causal:
+        pm &= kpos[None, :] <= qpos[:, None]
+    if cfg.sliding_window is not None:
+        pm &= kpos[None, :] > qpos[:, None] - cfg.sliding_window
+    pm &= (qpos[:, None] < seq_q) & (kpos[None, :] < seq_k)
+    return pm
+
+
+def _flash_fwd_padded(q, k, v, cfg, q_chunk, kv_chunk, seq_q, seq_k):
+    """q: (B,nq,cq,KV,G,D) chunked; k/v: (B,nk,ck,KV,D). Returns
+    (out (B,nq,cq,KV,G,D), lse (B,nq,KV,G,cq))."""
+    B, nq, cq, KV, G, D = q.shape
+    nk, ck = k.shape[1], k.shape[2]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def one_q_chunk(args):
+        qi, q_blk = args  # (B,cq,KV,G,D)
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bskgd,btkd->bkgst", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            pm = _flash_mask(cfg, qpos, kpos, seq_q, seq_k)
+            s = jnp.where(pm[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), k.transpose(1, 0, 2, 3, 4),
+             v.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return out.transpose(0, 3, 1, 2, 4), lse  # (B,cq,KV,G,D), (B,KV,G,cq)
+
+    outs, lses = jax.lax.map(one_q_chunk,
+                             (jnp.arange(nq), q.transpose(1, 0, 2, 3, 4, 5)))
+    return (outs.transpose(1, 0, 2, 3, 4, 5),
+            lses.transpose(1, 0, 2, 3, 4))  # (B,nq,KV,G,cq)
+
+
+def _flash_bwd_padded(cfg, q_chunk, kv_chunk, seq_q, seq_k, res, dout):
+    q, k, v, out, lse = res
+    B, nq, cq, KV, G, D = q.shape
+    nk, ck = k.shape[1], k.shape[2]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    delta = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (B,nq,cq,KV,G)
+
+    def q_step(carry, inputs):
+        dk, dv = carry
+        qi, q_blk, do_blk, lse_blk, delta_blk = inputs
+        qpos = qi * cq + jnp.arange(cq)
+        qf = q_blk.astype(jnp.float32)
+        dof = do_blk  # (B,cq,KV,G,D) f32
+        del_t = delta_blk.transpose(0, 2, 3, 1)  # (B,KV,G,cq)
+
+        def kv_step(carry2, inputs2):
+            dq_acc, dk, dv = carry2
+            ki, k_blk, v_blk = inputs2
+            kpos = ki * ck + jnp.arange(ck)
+            kf = k_blk.astype(jnp.float32)
+            vf = v_blk.astype(jnp.float32)
+            s = jnp.einsum("bskgd,btkd->bkgst", qf, kf) * scale
+            pm = _flash_mask(cfg, qpos, kpos, seq_q, seq_k)
+            s = jnp.where(pm[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])             # (B,KV,G,cq,ck)
+            dp = jnp.einsum("bskgd,btkd->bkgst", dof, vf)
+            ds = p * (dp - del_t[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgst,btkd->bskgd", ds, kf)
+            dk_j = jnp.einsum("bkgst,bskgd->btkd", ds, qf)
+            dv_j = jnp.einsum("bkgst,bskgd->btkd", p, dof)
+            dk = jax.lax.dynamic_update_index_in_dim(
+                dk, jax.lax.dynamic_index_in_dim(dk, ki, 1, False) + dk_j, ki, 1)
+            dv = jax.lax.dynamic_update_index_in_dim(
+                dv, jax.lax.dynamic_index_in_dim(dv, ki, 1, False) + dv_j, ki, 1)
+            return (dq_acc, dk, dv), None
+
+        dq0 = jnp.zeros((B, cq, KV, G, D), jnp.float32)
+        (dq, dk, dv), _ = jax.lax.scan(
+            kv_step, (dq0, dk, dv),
+            (jnp.arange(nk), k.transpose(1, 0, 2, 3, 4),
+             v.transpose(1, 0, 2, 3, 4)))
+        return (dk, dv), dq
+
+    dk0 = jnp.zeros((B, nk, ck, KV, D), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.arange(nq), q.transpose(1, 0, 2, 3, 4, 5),
+         do.transpose(1, 0, 2, 3, 4, 5), lse.transpose(1, 0, 2, 3, 4),
+         delta.transpose(1, 0, 2, 3, 4)))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_core(q, k, v, cfg, q_chunk, kv_chunk, seq_q, seq_k):
+    out, _ = _flash_fwd_padded(q, k, v, cfg, q_chunk, kv_chunk, seq_q, seq_k)
+    return out
+
+
+def _flash_core_fwd(q, k, v, cfg, q_chunk, kv_chunk, seq_q, seq_k):
+    out, lse = _flash_fwd_padded(q, k, v, cfg, q_chunk, kv_chunk, seq_q, seq_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(cfg, q_chunk, kv_chunk, seq_q, seq_k, res, dout):
+    return _flash_bwd_padded(cfg, q_chunk, kv_chunk, seq_q, seq_k, res,
+                             dout.astype(jnp.float32))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def attention_flash_xla(q, k, v, cfg: AttentionConfig, q_offset=0,
+                        kv_valid: Optional[jnp.ndarray] = None,
+                        q_chunk: int = 512, kv_chunk: int = 1024):
+    """Flash attention, XLA path. q: (B,S,H,D); k/v: (B,S,KV_eff,D).
+
+    kv_valid=None (training/dry-run packed batches) uses the custom-VJP
+    flash core (O(S) residuals); per-sequence masks fall back to the
+    inline masked implementation (inference-only, no grads needed)."""
+    if kv_valid is None and q_offset == 0:
+        B, Sq, H, D = q.shape
+        Skv = k.shape[1]
+        KV = k.shape[2]
+        G = H // KV
+        cq = min(q_chunk, Sq)
+        ck = min(kv_chunk, Skv)
+        pq, pk = (-Sq) % cq, (-Skv) % ck
+        qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+        kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+        vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+        nq, nk = (Sq + pq) // cq, (Skv + pk) // ck
+        qc = qp.reshape(B, nq, cq, KV, G, D)
+        kc = kp.reshape(B, nk, ck, KV, D)
+        vc = vp.reshape(B, nk, ck, KV, D)
+        out = _flash_core(qc, kc, vc, cfg, cq, ck, Sq, Skv)
+        out = out.reshape(B, Sq + pq, H, D)
+        return out[:, :Sq].astype(q.dtype)
+    return _attention_flash_xla_varlen(q, k, v, cfg, q_offset, kv_valid,
+                                       q_chunk, kv_chunk)
+
+
+def _attention_flash_xla_varlen(q, k, v, cfg: AttentionConfig, q_offset=0,
+                                kv_valid: Optional[jnp.ndarray] = None,
+                                q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax attention, scanning q chunks (outer, lax.map) and kv
+    chunks (inner, lax.scan). Memory per step is O(q_chunk * kv_chunk)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Sq) % q_chunk
+    pk = (-Skv) % kv_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    valid = jnp.ones((B, Skv), bool) if kv_valid is None else kv_valid
+    if pk:
+        valid = jnp.pad(valid, ((0, 0), (0, pk)))
+    nq, nk = (Sq + pad) // q_chunk, (Skv + pk) // kv_chunk
+    qg = q.reshape(B, nq, q_chunk, KV, G, D)
+    kc = k.reshape(B, nk, kv_chunk, KV, D)
+    vc = v.reshape(B, nk, kv_chunk, KV, D)
+    validc = valid.reshape(B, nk, kv_chunk)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def one_q_chunk(args):
+        qi, q_blk = args  # q_blk: (B, q_chunk, KV, G, D)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk, ok = inputs
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bskgd,btkd->bkgst", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = ok[:, None, None, None, :]  # (B,1,1,1,t)
+            pm = jnp.ones((q_chunk, kv_chunk), bool)
+            if cfg.causal:
+                pm &= kpos[None, :] <= qpos[:, None]
+            if cfg.sliding_window is not None:
+                pm &= kpos[None, :] > qpos[:, None] - cfg.sliding_window
+            mask = mask & pm[None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kc.transpose(1, 0, 2, 3, 4),
+             vc.transpose(1, 0, 2, 3, 4), validc.transpose(1, 0, 2)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, q_chunk, KV, G, D)
+
+    outs = jax.lax.map(one_q_chunk,
+                       (jnp.arange(nq), qg.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + pad, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(q, k_cache, v_cache, cfg: AttentionConfig,
+                     lengths: jnp.ndarray, window: Optional[int] = None):
+    """q: (B,1,H,D); caches: (B,W,KV_eff,D); lengths: (B,) tokens already
+    in cache (including the newly inserted one). Returns (B,1,H,D)."""
+    B, W, KV, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    # mixed-precision dots (preferred_element_type) so the bf16 cache is
+    # never materialized in f32 — scores accumulate in f32 on the MXU
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(D).astype(jnp.float32)
+    slot = jnp.arange(W)[None, :]
+    if window is None:
+        mask = slot < lengths[:, None]
+    else:
+        # ring buffer: every slot valid once the cache has wrapped
+        mask = slot < jnp.minimum(lengths, W)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_decode_pallas(q, k_cache, v_cache, cfg: AttentionConfig,
+                            lengths: jnp.ndarray,
+                            window: Optional[int] = None):
+    from repro.kernels.decode_attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, lengths, window=window)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def cache_window(cfg: AttentionConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_kv_cache(n_layers: int, batch: int, cfg: AttentionConfig,
+                  max_len: int, dtype=jnp.bfloat16) -> Dict:
+    W = cache_window(cfg, max_len)
+    shape = (n_layers, batch, W, cfg.n_kv_eff, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_insert_decode(cache_k, cache_v, k_new, v_new, lengths, window: int):
+    """Insert one token per sequence at ring position lengths % window.
+
+    cache_k/v: (B,W,KV,D); k_new/v_new: (B,1,KV,D); lengths: (B,)."""
+    idx = lengths % window
+    def upd(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    ck = jax.vmap(upd)(cache_k, k_new.astype(cache_k.dtype), idx)
+    cv = jax.vmap(upd)(cache_v, v_new.astype(cache_v.dtype), idx)
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Full attention block
+# ---------------------------------------------------------------------------
+
+def attention_block(x, p, cfg: AttentionConfig, *, positions,
+                    mode: str = "train",
+                    cache: Optional[Tuple] = None,
+                    lengths: Optional[jnp.ndarray] = None,
+                    kv_valid: Optional[jnp.ndarray] = None,
+                    impl: str = "auto"):
+    """One attention application.
+
+    mode: "train"/"prefill" (full sequence) or "decode" (one token w/ cache).
+    cache (decode): (k_cache, v_cache) of shape (B,W,KV_eff,D).
+    Returns (out (B,S,D), new_cache_kv or computed (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    q, k = _apply_positional(q, k, cfg, positions)
+
+    if mode == "decode":
+        assert cache is not None and lengths is not None
+        ck, cv = cache
+        W = ck.shape[1]
+        window = cfg.sliding_window
+        ck, cv = cache_insert_decode(ck, cv, k, v, lengths, W)
+        if impl == "pallas":
+            out = attention_decode_pallas(q, ck, cv, cfg, lengths + 1,
+                                          window=window)
+        else:
+            out = attention_decode(q, ck, cv, cfg, lengths + 1, window=window)
+        new_cache = (ck, cv)
+    else:
+        if impl == "pallas":
+            from repro.kernels.flash_attention import flash_attention
+            out = flash_attention(q, k, v, causal=cfg.causal,
+                                  window=cfg.sliding_window)
+        elif impl == "einsum" or (impl == "auto" and S * k.shape[1] <= 256 * 256):
+            out = attention_einsum(q, k, v, cfg, kv_valid=kv_valid)
+        else:
+            out = attention_flash_xla(q, k, v, cfg, kv_valid=kv_valid)
+        new_cache = (k, v)
+
+    out = constrain(out, ("batch", "seq_inner", "heads", "head_dim"))
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, new_cache

@@ -1,0 +1,156 @@
+"""Shared layer primitives: norms, projections, rotary embeddings.
+
+All parameters are plain ``jnp`` arrays in nested dicts; initializers are
+explicit so the whole model can be built under ``jax.eval_shape`` for the
+dry-run without allocating memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    # 2-sigma truncation keeps init bounded, matching common LM inits.
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (vocab, d), 1.0, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(key, d: int, kind: str) -> Dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(x, p: Dict, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu_sq":  # RWKV channel-mix
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE / partial RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rope_pct: float, theta: float) -> jnp.ndarray:
+    rot = int(head_dim * rope_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, rope_pct: float,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, rope_pct, theta)
+    rot = inv.shape[0] * 2
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    xr = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr.astype(x.dtype), xp], axis=-1) if rot < D else xr.astype(x.dtype)
+
+
+# M-RoPE (Qwen2-VL): head_dim split into 3 sections (t, h, w); each section
+# rotated with its own position stream. For pure-text tokens all three
+# position ids coincide and M-RoPE reduces to RoPE.
+MROPE_SECTIONS = (0.25, 0.375, 0.375)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions3: (B, S, 3) multimodal position ids."""
+    D = x.shape[-1]
+    half = D // 2
+    sec = [int(half * s) for s in MROPE_SECTIONS]
+    sec[-1] = half - sec[0] - sec[1]
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # frequency index -> which position stream it uses
+    stream = jnp.concatenate([
+        jnp.zeros((sec[0],), jnp.int32),
+        jnp.ones((sec[1],), jnp.int32),
+        2 * jnp.ones((sec[2],), jnp.int32),
+    ])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(stream[None, None, :], positions3.shape[:2] + (half,)),
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos * inv  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d: int, d_ff: int, gated: bool) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff), "down": dense_init(ks[1], d_ff, d)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def apply_mlp(x: jnp.ndarray, p: Dict, act: str, gated: bool) -> jnp.ndarray:
+    up = x @ p["up"].astype(x.dtype)
+    if gated:
+        g = activation(x @ p["gate"].astype(x.dtype), act)
+        h = g * up
+    else:
+        h = activation(up, act)
+    return h @ p["down"].astype(x.dtype)

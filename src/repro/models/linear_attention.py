@@ -1,0 +1,129 @@
+"""Generalized gated linear attention (GLA) recurrence.
+
+Covers RWKV6 (per-channel data-dependent decay + current-token bonus) and
+Mamba2/SSD (per-head scalar decay, inclusive current token):
+
+    S_t = Diag(w_t) S_{t-1} + k_t v_t^T          state S: (K, V)
+    rwkv:  o_t = q_t^T (S_{t-1} + Diag(u) k_t v_t^T)
+    ssd:   o_t = q_t^T S_t
+
+The chunked formulation (intra-chunk matmuls + inter-chunk state carry)
+is the math the ``gla_scan`` Pallas kernel implements; this module is the
+XLA/reference path used on CPU and in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_step(q, k, v, log_w, state, u: Optional[jnp.ndarray] = None,
+             mode: str = "ssd"):
+    """Single-token decode step.
+
+    q/k/log_w: (B, H, K); v: (B, H, V); state: (B, H, K, V);
+    u: (H, K) bonus (rwkv) or None. Returns (o (B,H,V), new_state)."""
+    w = jnp.exp(log_w.astype(jnp.float32))
+    kv = k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    if mode == "rwkv":
+        assert u is not None
+        eff = state + u.astype(jnp.float32)[None, :, :, None] * kv
+        o = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), eff)
+        new_state = w[..., None] * state + kv
+    else:
+        new_state = w[..., None] * state + kv
+        o = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), new_state)
+    return o.astype(v.dtype), new_state
+
+
+def gla_chunked(q, k, v, log_w, u: Optional[jnp.ndarray] = None,
+                mode: str = "ssd", chunk: int = 32,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked parallel scan.
+
+    q/k/log_w: (B, T, H, K); v: (B, T, H, V); u: (H, K) or None.
+    Returns (o (B, T, H, V), final_state (B, H, K, V)).
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        log_w = jnp.pad(log_w, zq)  # log w = 0 -> w = 1 for padding (no decay)
+    n = (T + pad) // chunk
+
+    def to_chunks(x):
+        return x.reshape(B, n, chunk, H, -1).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc, lwc = map(to_chunks, (q, k, v, log_w))  # (n, B, H, c, ·)
+    lwc = lwc.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        qb, kb, vb, lwb = inp                # (B, H, c, ·)
+        qb = qb.astype(jnp.float32)
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        L = jnp.cumsum(lwb, axis=2)          # cumulative log decay incl. t
+        Lc = L[:, :, -1:, :]                 # total chunk decay
+        if mode == "rwkv":
+            # decay applied to state BEFORE reading at t: prod_{j<t} w_j
+            L_read = L - lwb                 # exclusive cumsum
+            strict = True
+        else:
+            L_read = L                       # inclusive: state after update
+            strict = False
+        # inter-chunk: o_inter[t] = (q_t * exp(L_read_t)) @ S_prev
+        # (L_read <= 0 -> exp underflows at worst; never overflows)
+        q_sc = qb * jnp.exp(L_read)
+        o_inter = jnp.einsum("bhck,bhkv->bhcv", q_sc, state)
+        # intra-chunk: pairwise log-difference exp(L_read_t - L_j), j <= t.
+        # Computed as a difference (not factored exp(L_t)*exp(-L_j)) so that
+        # strong decay (e.g. Mamba2 a*dt >> 1) cannot overflow: valid pairs
+        # always have L_read_t - L_j <= 0. The Pallas kernel implements the
+        # same math with two-level chunking.
+        t_idx = jnp.arange(chunk)
+        mask = t_idx[:, None] > t_idx[None, :] if strict else t_idx[:, None] >= t_idx[None, :]
+        diff = L_read[:, :, :, None, :] - L[:, :, None, :, :]  # (B,H,t,j,K)
+        diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+        att = jnp.einsum("bhck,bhjk,bhcjk->bhcj", qb, kb, jnp.exp(diff))
+        o_intra = jnp.einsum("bhcj,bhjv->bhcv", att, vb)
+        if mode == "rwkv":
+            assert u is not None
+            bonus = jnp.einsum("bhck,bhck->bhc",
+                               qb * u.astype(jnp.float32)[None, :, None, :], kb)
+            o_intra = o_intra + bonus[..., None] * vb
+        # state update: S_new = Diag(exp(Lc)) S + sum_j (k_j exp(Lc - L_j)) v_j
+        k_dec = kb * jnp.exp(Lc - L)
+        s_upd = jnp.einsum("bhck,bhcv->bhkv", k_dec, vb)
+        new_state = jnp.exp(Lc).transpose(0, 1, 3, 2) * state + s_upd
+        return new_state, o_inter + o_intra
+
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), jnp.float32)
+    final_state, outs = jax.lax.scan(chunk_step, initial_state, (qc, kc, vc, lwc))
+    o = outs.transpose(1, 0, 3, 2, 4).reshape(B, T + pad, H, V)
+    return o[:, :T].astype(v.dtype), final_state
+
+
+def gla_reference(q, k, v, log_w, u: Optional[jnp.ndarray] = None,
+                  mode: str = "ssd",
+                  initial_state: Optional[jnp.ndarray] = None):
+    """Token-by-token scan oracle (slow, exact)."""
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(state, inp):
+        qt, kt, vt, lwt = inp
+        o, ns = gla_step(qt, kt, vt, lwt, state, u=u, mode=mode)
+        return ns, o
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (q, k, v, log_w))
+    final, outs = jax.lax.scan(step, initial_state, xs)
+    return outs.transpose(1, 0, 2, 3), final

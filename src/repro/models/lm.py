@@ -1,0 +1,189 @@
+"""Unified model facade: init / train-loss / prefill / decode per family.
+
+``build_model(cfg)`` returns a ``Model`` whose step functions are what the
+launcher jits, the dry-run lowers, and the serving engine drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models import attention as attn_mod
+from repro.models import transformer as tf
+from repro.models import rwkv as rwkv_mod
+from repro.models import zamba as zamba_mod
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over valid positions; logits promoted to fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if valid is None:
+        return nll.mean()
+    v = valid.astype(jnp.float32)
+    return (nll * v).sum() / jnp.maximum(v.sum(), 1.0)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    attn_impl: str = "auto"
+    remat: bool = False
+    remat_policy: str = "minimal"  # "minimal" (save nothing) | "dots"
+
+    # ---------------- init ----------------
+    def init(self, rng) -> Dict:
+        c = self.cfg
+        if c.family == "ssm":
+            return rwkv_mod.init_rwkv(rng, c)
+        if c.family == "hybrid":
+            return zamba_mod.init_zamba(rng, c)
+        return tf.init_transformer(rng, c)
+
+    # ---------------- embeddings ----------------
+    def _embed(self, params, batch: Dict) -> jnp.ndarray:
+        c = self.cfg
+        if "embeds" in batch:  # modality stub (vlm / audio)
+            x = batch["embeds"]
+            return constrain(x.astype(jnp.bfloat16 if c.dtype == "bfloat16"
+                                      else jnp.float32),
+                             ("batch", "seq", "embed"))
+        return tf.embed_tokens(params, c, batch["tokens"])
+
+    def _positions(self, batch: Dict, S: int, lengths=None, decode=False):
+        c = self.cfg
+        if c.attention is not None and c.attention.rope == "mrope":
+            if "positions3" in batch:
+                return batch["positions3"]
+            if decode:
+                return jnp.broadcast_to(lengths[:, None, None],
+                                        (lengths.shape[0], 1, 3))
+            B = batch["tokens"].shape[0] if "tokens" in batch else batch["embeds"].shape[0]
+            p = jnp.arange(S)[None, :, None]
+            return jnp.broadcast_to(p, (B, S, 3))
+        if decode:
+            return lengths[:, None]
+        return jnp.arange(S)[None, :]
+
+    # ---------------- training ----------------
+    def loss_fn(self, params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        c = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = self._positions(batch, S)
+        if c.family == "ssm":
+            h, _, aux = rwkv_mod.rwkv_forward(params, c, x, mode="train",
+                                              remat=self.remat,
+                                              remat_policy=self.remat_policy)
+        elif c.family == "hybrid":
+            h, _, aux = zamba_mod.zamba_forward(
+                params, c, x, positions=positions, mode="train",
+                remat=self.remat, attn_impl=self.attn_impl,
+                remat_policy=self.remat_policy)
+        else:
+            h, _, aux = tf.transformer_forward(
+                params, c, x, positions=positions, mode="train",
+                remat=self.remat, attn_impl=self.attn_impl,
+                remat_policy=self.remat_policy)
+        if c.family == "ssm":
+            from repro.models.layers import layernorm
+            h = layernorm(h, params["final_scale"], params["final_bias"])
+            logits = jnp.einsum("...d,vd->...v", h,
+                                params["lm_head"].astype(h.dtype))
+        else:
+            logits = tf.lm_logits(params, c, h)
+        valid = batch.get("valid")
+        loss = cross_entropy(logits, batch["labels"], valid)
+        loss = loss + aux
+        return loss, {"ce": loss, "aux": aux}
+
+    # ---------------- serving: prefill ----------------
+    def prefill(self, params, batch: Dict, max_len: int
+                ) -> Tuple[jnp.ndarray, Any]:
+        """Full-sequence forward; returns (last-token logits (B,V), cache)."""
+        c = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = self._positions(batch, S)
+        lengths = batch.get("lengths", jnp.full((B,), S, jnp.int32))
+        kv_valid = None
+        if "lengths" in batch:
+            kv_valid = jnp.arange(S)[None, :] < lengths[:, None]
+        if c.family == "ssm":
+            h, pre, _ = rwkv_mod.rwkv_forward(params, c, x, mode="prefill")
+            cache = pre
+        elif c.family == "hybrid":
+            h, pre, _ = zamba_mod.zamba_forward(
+                params, c, x, positions=positions, mode="prefill",
+                kv_valid=kv_valid, attn_impl=self.attn_impl)
+            cache = zamba_mod.fill_zamba_cache_from_prefill(
+                c, pre, S, max_len, B)
+        else:
+            h, pre, _ = tf.transformer_forward(
+                params, c, x, positions=positions, mode="prefill",
+                kv_valid=kv_valid, attn_impl=self.attn_impl)
+            cache = tf.fill_cache_from_prefill(
+                c, pre["computed_k"], pre["computed_v"], S, max_len, lengths)
+        # last valid position logits only (serving does not need all logits)
+        idx = jnp.maximum(lengths - 1, 0)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+        if c.family == "ssm":
+            from repro.models.layers import layernorm
+            h_last = layernorm(h_last, params["final_scale"], params["final_bias"])
+            logits = jnp.einsum("...d,vd->...v", h_last,
+                                params["lm_head"].astype(h_last.dtype))
+        else:
+            logits = tf.lm_logits(params, c, h_last)
+        return logits[:, 0], cache
+
+    # ---------------- serving: one decode step ----------------
+    def decode_step(self, params, batch: Dict, cache: Any
+                    ) -> Tuple[jnp.ndarray, Any]:
+        """batch: {"tokens": (B,1)} (+ positions3). Returns ((B,V), cache)."""
+        c = self.cfg
+        x = self._embed(params, batch)
+        lengths = cache["lengths"]
+        positions = self._positions(batch, 1, lengths=lengths, decode=True)
+        if c.family == "ssm":
+            h, new_cache, _ = rwkv_mod.rwkv_forward(params, c, x, mode="decode",
+                                                    cache=cache)
+        elif c.family == "hybrid":
+            h, new_cache, _ = zamba_mod.zamba_forward(
+                params, c, x, positions=positions, mode="decode", cache=cache,
+                attn_impl=self.attn_impl)
+        else:
+            h, new_cache, _ = tf.transformer_forward(
+                params, c, x, positions=positions, mode="decode", cache=cache,
+                attn_impl=self.attn_impl)
+        if c.family == "ssm":
+            from repro.models.layers import layernorm
+            h = layernorm(h, params["final_scale"], params["final_bias"])
+            logits = jnp.einsum("...d,vd->...v", h,
+                                params["lm_head"].astype(h.dtype))
+        else:
+            logits = tf.lm_logits(params, c, h)
+        return logits[:, 0], new_cache
+
+    # ---------------- cache factory ----------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        c = self.cfg
+        if c.family == "ssm":
+            return rwkv_mod.init_rwkv_cache(c, batch, dtype)
+        if c.family == "hybrid":
+            return zamba_mod.init_zamba_cache(c, batch, max_len, dtype)
+        return attn_mod.init_kv_cache(c.n_layers, batch, c.attention,
+                                      max_len, dtype)
+
+
+def build_model(cfg: ModelConfig, attn_impl: str = "auto",
+                remat: bool = False, remat_policy: str = "minimal") -> Model:
+    return Model(cfg=cfg, attn_impl=attn_impl, remat=remat,
+                 remat_policy=remat_policy)

@@ -1,0 +1,131 @@
+"""Mamba2 (SSD) block for the Zamba2 hybrid backbone.
+
+Projections are stored head-major — in_x/in_z (D, H, P), out (H, P, D) —
+so TP PartitionSpecs align with head boundaries. B/C projections
+(n_groups * d_state, shared across heads) stay replicated.
+
+split projections -> depthwise causal conv over (x, B, C) -> selective
+state-space recurrence with per-head scalar decay
+``a_t = exp(-exp(A_log) * dt_t)`` via the generalized GLA scan ->
+gated RMSNorm -> out projection.
+
+Decode state per layer: conv_x (B, K-1, H, P), conv_bc (B, K-1, 2GN),
+ssm state (B, H, N, P).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models.layers import truncated_normal_init
+from repro.models.linear_attention import gla_chunked, gla_step
+
+
+def mamba_block_params(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    H = s.n_heads(d)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "in_z": truncated_normal_init(ks[0], (d, H, P), sc),
+        "in_x": truncated_normal_init(ks[1], (d, H, P), sc),
+        "in_B": truncated_normal_init(ks[2], (d, G * N), sc),
+        "in_C": truncated_normal_init(ks[3], (d, G * N), sc),
+        "in_dt": truncated_normal_init(ks[4], (d, H), sc),
+        "conv_x_w": 0.1 * jax.random.normal(ks[5], (s.d_conv, H, P)),
+        "conv_x_b": jnp.zeros((H, P), jnp.float32),
+        "conv_bc_w": 0.1 * jax.random.normal(ks[6], (s.d_conv, 2 * G * N)),
+        "conv_bc_b": jnp.zeros((2 * G * N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        # standard Mamba init: dt in [1e-3, 1e-1] log-uniform, via softplus^-1
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jnp.linspace(
+            jnp.log(1e-3), jnp.log(1e-1), H)))),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((H, P), jnp.float32),
+        "out_proj": truncated_normal_init(ks[7], (H, P, d),
+                                          1.0 / math.sqrt(H * P)),
+    }
+
+
+def _causal_conv(x, w, b, conv_state: Optional[jnp.ndarray]):
+    """Depthwise causal conv along time. x: (B,T,...C); w: (K,...C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = [(0, 0)] * x.ndim
+        pad[1] = (K - 1, 0)
+        xp = jnp.pad(x, pad)
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, k:k + x.shape[1]] * w[k].astype(x.dtype) for k in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, xp.shape[1] - (K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def mamba_block(x, p, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                mode: str = "train"):
+    """x: (B,T,D) -> (out, (new_conv_x, new_conv_bc), new_ssm_state).
+
+    conv_state: None or (conv_x_state, conv_bc_state)."""
+    d = cfg.d_model
+    s = cfg.ssm
+    H = s.n_heads(d)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B_, T, _ = x.shape
+
+    z = jnp.einsum("btd,dhp->bthp", x, p["in_z"].astype(x.dtype))
+    xs = jnp.einsum("btd,dhp->bthp", x, p["in_x"].astype(x.dtype))
+    xs = constrain(xs, ("batch", "seq", "heads", "head_dim"))
+    Bmat = x @ p["in_B"].astype(x.dtype)
+    Cmat = x @ p["in_C"].astype(x.dtype)
+    dt = x @ p["in_dt"].astype(x.dtype)                              # (B,T,H)
+
+    cx, cbc = conv_state if conv_state is not None else (None, None)
+    xs, new_cx = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"], cx)
+    bc, new_cbc = _causal_conv(jnp.concatenate([Bmat, Cmat], -1),
+                               p["conv_bc_w"], p["conv_bc_b"], cbc)
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,T,H)
+    a = jnp.exp(p["A_log"])                                          # (H,)
+    log_w = -a * dt                                                  # (B,T,H)
+
+    xs = xs * dt.astype(xs.dtype)[..., None]                         # dt-scaled
+    rep = H // G
+    Bm = jnp.repeat(Bmat.reshape(B_, T, G, N), rep, axis=2)          # (B,T,H,N)
+    Cm = jnp.repeat(Cmat.reshape(B_, T, G, N), rep, axis=2)
+    log_w_full = jnp.broadcast_to(log_w[..., None], (B_, T, H, N))
+
+    if mode == "decode":
+        o, ssm_state = gla_step(Cm[:, 0], Bm[:, 0], xs[:, 0], log_w_full[:, 0],
+                                ssm_state, mode="ssd")
+        o = o[:, None]
+    else:
+        o, ssm_state = gla_chunked(Cm, Bm, xs, log_w_full, mode="ssd",
+                                   initial_state=ssm_state)
+    o = o + xs * p["D_skip"].astype(xs.dtype)[None, None, :, None]
+
+    # gated RMSNorm over the full inner dim (H*P), head-major layout
+    g = o.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=(-2, -1), keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]
+    out = jnp.einsum("bthp,hpd->btd", g.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    return out, (new_cx, new_cbc), ssm_state
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    H = s.n_heads(cfg.d_model)
+    return {
+        "conv_x": (cfg.n_layers, batch, s.d_conv - 1, H, s.head_dim),
+        "conv_bc": (cfg.n_layers, batch, s.d_conv - 1, 2 * s.n_groups * s.d_state),
+        "ssm": (cfg.n_layers, batch, H, s.d_state, s.head_dim),
+    }

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+TPU-friendly formulation (static shapes, dense einsums on the MXU):
+dispatch is computed *per batch row* (vmap over B), so every
+intermediate — router logits, sort indices, the (E, C, d) dispatch
+buffer — keeps a leading batch dim and stays sharded over the data axes
+under GSPMD. The expert dim of the buffer is sharded over the model axis
+when the expert count divides it (expert parallelism; the scatter/gather
+becomes the all-to-all), otherwise experts are TP-sharded internally
+along d_expert.
+
+Capacity is enforced per row: C = ceil(top_k * S * capacity_factor / E),
+overflowing tokens are dropped (standard Switch/GShard semantics).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import activation, dense_init
+from repro.distributed.axes import constrain
+
+
+def moe_params(key, d_model: int, cfg: MoEConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    E, F = cfg.n_experts, cfg.d_expert
+    scale = 1.0 / math.sqrt(d_model)
+    return {
+        "router": dense_init(ks[0], d_model, E),
+        "up": scale * jax.random.truncated_normal(ks[1], -2, 2, (E, d_model, F)),
+        "gate": scale * jax.random.truncated_normal(ks[2], -2, 2, (E, d_model, F)),
+        "down": (1.0 / math.sqrt(F)) * jax.random.truncated_normal(
+            ks[3], -2, 2, (E, F, d_model)),
+    }
+
+
+def capacity_for(tokens_per_row: int, cfg: MoEConfig,
+                 capacity_factor: float = 1.25) -> int:
+    c = int(math.ceil(cfg.top_k * tokens_per_row * capacity_factor
+                      / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # MXU-friendly multiple
+
+
+def _dispatch_row(xt, probs, idx, gate_vals, E: int, K: int, C: int):
+    """Per-row dispatch. xt: (S, D); idx/gate_vals: (S, K).
+    Returns (buffer (E, C, D), combine metadata)."""
+    S, D = xt.shape
+    flat_expert = idx.reshape(S * K)
+    flat_token = jnp.repeat(jnp.arange(S), K)
+    flat_gate = gate_vals.reshape(S * K)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    group_sizes = jnp.zeros((E,), jnp.int32).at[flat_expert].add(1)
+    group_start = jnp.cumsum(group_sizes) - group_sizes
+    pos_in_group = jnp.arange(S * K) - group_start[sorted_expert]
+    keep = pos_in_group < C
+    dest = jnp.where(keep, sorted_expert * C + pos_in_group, E * C)
+
+    gathered = jnp.where(keep[:, None], xt[sorted_token], 0)
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[dest].set(gathered)
+    return buf[:E * C].reshape(E, C, D), (sorted_token, sorted_gate, keep, dest)
+
+
+def _combine_row(out_buf, meta, S: int, D: int):
+    sorted_token, sorted_gate, keep, dest = meta
+    E_C = out_buf.shape[0] * out_buf.shape[1]
+    flat_out = out_buf.reshape(E_C, -1)
+    picked = jnp.where(keep[:, None],
+                       flat_out[jnp.minimum(dest, E_C - 1)], 0)
+    weighted = picked.astype(jnp.float32) * sorted_gate[:, None]
+    return jnp.zeros((S, D), jnp.float32).at[sorted_token].add(weighted)
+
+
+def apply_moe(x: jnp.ndarray, p: Dict, cfg: MoEConfig, act: str = "silu",
+              capacity_factor: float = 1.25,
+              train: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity_for(S, cfg, capacity_factor)
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                        # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style), over all tokens
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    buf, meta = jax.vmap(
+        lambda xt, pr, ix, gv: _dispatch_row(xt, pr, ix, gv, E, K, C)
+    )(x, probs, idx, gate_vals)                                     # (B,E,C,D)
+    buf = constrain(buf, ("batch", "expert", None, None))
+
+    up = jnp.einsum("becd,edf->becf", buf, p["up"].astype(x.dtype))
+    gt = jnp.einsum("becd,edf->becf", buf, p["gate"].astype(x.dtype))
+    h = activation(gt, act) * up
+    out_buf = jnp.einsum("becf,efd->becd", h, p["down"].astype(x.dtype))
+    out_buf = constrain(out_buf, ("batch", "expert", None, None))
+
+    out = jax.vmap(lambda ob, m: _combine_row(ob, m, S, D))(out_buf, meta)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,241 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure (token-shift LoRA mixers, low-rank decay, per-channel
+bonus ``u``, per-head group norm) with the recurrence computed by the
+generalized GLA scan (``repro.models.linear_attention`` on CPU/dry-run,
+``repro.kernels.gla_scan`` on TPU).
+
+Decode state per layer: time-mix shift (B, D), channel-mix shift (B, D),
+wkv state (B, H, K, K).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, truncated_normal_init
+from repro.models.linear_attention import gla_chunked, gla_step
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_block_params(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    H = d // r.head_dim
+    ks = jax.random.split(key, 16)
+    import math
+    sc = 1.0 / math.sqrt(d)
+    hd = r.head_dim
+    p = {
+        # time-mix projections (head-major for TP alignment)
+        "wr": truncated_normal_init(ks[0], (d, H, hd), sc),
+        "wk": truncated_normal_init(ks[1], (d, H, hd), sc),
+        "wv": truncated_normal_init(ks[2], (d, H, hd), sc),
+        "wg": truncated_normal_init(ks[3], (d, H, hd), sc),
+        "wo": truncated_normal_init(ks[4], (H, hd, d), sc),
+        # token-shift base mixers + stacked LoRA for the 5 streams
+        "maa_x": jnp.zeros((d,), jnp.float32),
+        "maa": jnp.zeros((5, d), jnp.float32),
+        "mix_lora_a": truncated_normal_init(ks[5], (5, d, r.mix_lora), 0.01),
+        "mix_lora_b": truncated_normal_init(ks[6], (5, r.mix_lora, d), 0.01),
+        # data-dependent decay (low-rank) + base
+        "w0": (-6.0 + 5.0 * (jnp.arange(d) / max(d - 1, 1)) ** 0.9
+               ).reshape(H, hd),
+        "decay_lora_a": truncated_normal_init(ks[7], (d, r.decay_lora), 0.01),
+        "decay_lora_b": truncated_normal_init(ks[8], (r.decay_lora, H, hd), 0.01),
+        # per-channel bonus
+        "u": truncated_normal_init(ks[9], (H, r.head_dim), 0.3),
+        # per-head group norm
+        "ln_x_scale": jnp.ones((H, hd), jnp.float32),
+        "ln_x_bias": jnp.zeros((H, hd), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_key": dense_init(ks[10], d, cfg.mlp.d_ff),
+        "cm_value": dense_init(ks[11], cfg.mlp.d_ff, d),
+        "cm_recept": dense_init(ks[12], d, d),
+    }
+    return p
+
+
+def _group_norm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head layernorm over head_dim (RWKV's GroupNorm(H)).
+    x: (B, T, H, hd); scale/bias: (H, hd)."""
+    xh = x.astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = jnp.square(xh - mu).mean(-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return y * scale + bias
+
+
+def _token_shift(x, shift_state: Optional[jnp.ndarray]):
+    """Returns previous-token stream. x: (B,T,D); shift_state: (B,D)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if shift_state is not None:
+        prev = prev.at[:, 0].set(shift_state.astype(x.dtype))
+    return prev
+
+
+def rwkv_time_mix(x, p, cfg: ModelConfig, *, shift_state=None, wkv_state=None,
+                  mode: str = "train"):
+    d = cfg.d_model
+    r = cfg.rwkv
+    H = d // r.head_dim
+    B, T, _ = x.shape
+    xf = x.astype(jnp.float32)
+    prev = _token_shift(xf, shift_state)
+    xx = prev - xf
+    xxx = xf + xx * p["maa_x"]
+    # 5 low-rank token-shift mixers: (B,T,5,d)
+    mix = jnp.einsum(
+        "btsr,srd->btsd",
+        jnp.tanh(jnp.einsum("btd,sdr->btsr", xxx, p["mix_lora_a"])),
+        p["mix_lora_b"])
+    streams = {}
+    for i, name in enumerate(MIX_NAMES):
+        streams[name] = xf + xx * (p["maa"][i] + mix[:, :, i])
+    wt = streams["w"]
+    kx = streams["k"].astype(x.dtype)
+    vx = streams["v"].astype(x.dtype)
+    rx = streams["r"].astype(x.dtype)
+    gx = streams["g"].astype(x.dtype)
+
+    rr = jnp.einsum("btd,dhk->bthk", rx, p["wr"].astype(x.dtype))
+    kk = jnp.einsum("btd,dhk->bthk", kx, p["wk"].astype(x.dtype))
+    vv = jnp.einsum("btd,dhk->bthk", vx, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("btd,dhk->bthk", gx, p["wg"].astype(x.dtype)))
+
+    # data-dependent decay: log w = -exp(w0 + lora(wt)), in (-inf, 0)
+    dlora = jnp.einsum("btr,rhk->bthk", jnp.tanh(wt @ p["decay_lora_a"]),
+                       p["decay_lora_b"])
+    log_w = -jnp.exp(jnp.clip(p["w0"] + dlora, -20.0, 10.0))
+
+    if mode == "decode":
+        o, new_state = gla_step(rr[:, 0], kk[:, 0], vv[:, 0], log_w[:, 0],
+                                wkv_state, u=p["u"], mode="rwkv")
+        o = o[:, None]  # (B,1,H,V)
+    else:
+        o, new_state = gla_chunked(rr, kk, vv, log_w, u=p["u"], mode="rwkv",
+                                   initial_state=wkv_state)
+    o = _group_norm_heads(o, p["ln_x_scale"], p["ln_x_bias"])
+    out = jnp.einsum("bthk,hkd->btd", o.astype(x.dtype) * g,
+                     p["wo"].astype(x.dtype))
+    return out, xf[:, -1], new_state
+
+
+def rwkv_channel_mix(x, p, *, shift_state=None):
+    xf = x.astype(jnp.float32)
+    prev = _token_shift(xf, shift_state)
+    xx = prev - xf
+    xk = (xf + xx * p["cm_mu_k"]).astype(x.dtype)
+    xr = (xf + xx * p["cm_mu_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_key"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["cm_recept"].astype(x.dtype)) * (
+        k @ p["cm_value"].astype(x.dtype))
+    return out, xf[:, -1]
+
+
+def rwkv_state_shapes(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    K = cfg.rwkv.head_dim
+    return {
+        "tm_shift": (cfg.n_layers, batch, d),
+        "cm_shift": (cfg.n_layers, batch, d),
+        "wkv": (cfg.n_layers, batch, H, K, K),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full RWKV6 stack
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig) -> Dict:
+    k_emb, k_layers, k_final, k0 = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: rwkv_block_params(k, cfg))(layer_keys)
+    d = cfg.d_model
+    return {
+        "embed": truncated_normal_init(k_emb, (cfg.vocab_size, d), 1.0),
+        "ln0_scale": jnp.ones((d,), jnp.float32),
+        "ln0_bias": jnp.zeros((d,), jnp.float32),
+        "layers": layers,
+        # per-layer norms are stacked inside layers? kept separate for clarity
+        "ln1_scale": jnp.ones((cfg.n_layers, d), jnp.float32),
+        "ln1_bias": jnp.zeros((cfg.n_layers, d), jnp.float32),
+        "ln2_scale": jnp.ones((cfg.n_layers, d), jnp.float32),
+        "ln2_bias": jnp.zeros((cfg.n_layers, d), jnp.float32),
+        "final_scale": jnp.ones((d,), jnp.float32),
+        "final_bias": jnp.zeros((d,), jnp.float32),
+        "lm_head": truncated_normal_init(k_final, (cfg.vocab_size, d), 1.0),
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    ss = rwkv_state_shapes(cfg, batch)
+    return {
+        "tm_shift": jnp.zeros(ss["tm_shift"], jnp.float32),
+        "cm_shift": jnp.zeros(ss["cm_shift"], jnp.float32),
+        "wkv": jnp.zeros(ss["wkv"], jnp.float32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def rwkv_forward(params, cfg: ModelConfig, x, *, mode: str = "train",
+                 cache: Optional[Dict] = None, remat: bool = False,
+                 remat_policy: str = "minimal"):
+    """x: (B,S,D) embeddings (post ln0 applied here). Returns
+    (hidden, new_cache, aux=0)."""
+    from repro.models.layers import layernorm
+    from repro.distributed.axes import constrain
+
+    B, S, _ = x.shape
+    x = layernorm(x, params["ln0_scale"], params["ln0_bias"])
+    lengths = cache["lengths"] if cache is not None else None
+
+    if cache is not None:
+        tm0, cm0, wkv0 = cache["tm_shift"], cache["cm_shift"], cache["wkv"]
+    else:
+        ss = rwkv_state_shapes(cfg, B)
+        tm0 = jnp.zeros(ss["tm_shift"], jnp.float32)
+        cm0 = jnp.zeros(ss["cm_shift"], jnp.float32)
+        wkv0 = jnp.zeros(ss["wkv"], jnp.float32)
+
+    use_state = cache is not None
+
+    def body(h, inp):
+        lp, l1s, l1b, l2s, l2b, tm_s, cm_s, wkv_s = inp
+        hn = layernorm(h, l1s, l1b)
+        out, tm_new, wkv_new = rwkv_time_mix(
+            hn, lp, cfg,
+            shift_state=tm_s if use_state else None,
+            wkv_state=wkv_s if use_state else None,
+            mode=mode if mode == "decode" else "train")
+        h = h + out
+        hn = layernorm(h, l2s, l2b)
+        out, cm_new = rwkv_channel_mix(hn, lp, shift_state=cm_s if use_state else None)
+        h = h + out
+        h = constrain(h, ("batch", "seq", "embed"))
+        return h, (tm_new, cm_new, wkv_new)
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (params["layers"], params["ln1_scale"], params["ln1_bias"],
+          params["ln2_scale"], params["ln2_bias"], tm0, cm0, wkv0)
+    h, (tm_new, cm_new, wkv_new) = jax.lax.scan(body, x, xs)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        nl = (lengths + (1 if mode == "decode" else S)) if lengths is not None \
+            else jnp.full((B,), S, jnp.int32)
+        new_cache = {"tm_shift": tm_new, "cm_shift": cm_new, "wkv": wkv_new,
+                     "lengths": nl}
+    return h, new_cache, jnp.zeros((), jnp.float32)

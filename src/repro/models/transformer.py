@@ -1,0 +1,150 @@
+"""Decoder/encoder transformer stacks (dense / MoE / VLM / audio families).
+
+Layers are *stacked* (leading ``n_layers`` dim) and executed with
+``lax.scan`` so compile time stays flat for 56-layer models partitioned
+over 512 devices. Remat is applied to the scan body for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.axes import constrain
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, embed_init,
+                                 mlp_params, norm_params)
+from repro.models.moe import apply_moe, moe_params
+
+
+def _layer_params(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": norm_params(ks[0], cfg.d_model, cfg.norm),
+        "attn": attn.attn_params(ks[1], cfg.d_model, cfg.attention),
+        "mlp_norm": norm_params(ks[2], cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_params(ks[3], cfg.d_model, cfg.moe)
+    else:
+        p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.mlp.d_ff, cfg.mlp.gated)
+    return p
+
+
+def init_transformer(key, cfg: ModelConfig) -> Dict:
+    k_emb, k_layers, k_final = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_params(k, cfg))(layer_keys)
+    params = {
+        "layers": layers,
+        "final_norm": norm_params(k_final, cfg.d_model, cfg.norm),
+    }
+    if not cfg.embed_stub or cfg.family in ("vlm",):
+        params["embed"] = embed_init(k_emb, cfg.vocab_size, cfg.d_model)
+    else:  # audio stub: inputs are frame embeddings; output head only
+        params["embed"] = embed_init(k_emb, cfg.vocab_size, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(
+            jax.random.fold_in(k_emb, 1), cfg.vocab_size, cfg.d_model)
+    return params
+
+
+def _layer_apply(x, lp, cfg: ModelConfig, *, positions, mode, cache_kv,
+                 lengths, kv_valid, impl):
+    h = apply_norm(x, lp["attn_norm"], cfg.norm, cfg.norm_eps)
+    h = constrain(h, ("batch", "seq_inner", "embed"))
+    a_out, new_kv = attn.attention_block(
+        h, lp["attn"], cfg.attention, positions=positions, mode=mode,
+        cache=cache_kv, lengths=lengths, kv_valid=kv_valid, impl=impl)
+    x = x + a_out
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm, cfg.norm_eps)
+    h = constrain(h, ("batch", "seq_inner", "embed"))
+    if cfg.family == "moe":
+        m_out, aux = apply_moe(h, lp["moe"], cfg.moe,
+                               act=cfg.mlp.activation if cfg.mlp else "silu")
+    else:
+        m_out = apply_mlp(h, lp["mlp"], cfg.mlp.activation, cfg.mlp.gated)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + m_out
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_kv, aux
+
+
+def transformer_forward(params, cfg: ModelConfig, x, *, positions,
+                        mode: str = "train",
+                        cache: Optional[Dict] = None,
+                        kv_valid: Optional[jnp.ndarray] = None,
+                        remat: bool = False,
+                        attn_impl: str = "auto",
+                        remat_policy: str = "minimal") -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, D) embeddings. Returns (hidden (B,S,D), new_cache)."""
+    lengths = cache["lengths"] if cache is not None else None
+
+    def body(carry, lp_and_cache):
+        h, aux_total = carry
+        if mode == "decode":
+            lp, ck, cv = lp_and_cache
+            h, (nk, nv), aux = _layer_apply(
+                h, lp, cfg, positions=positions, mode=mode, cache_kv=(ck, cv),
+                lengths=lengths, kv_valid=kv_valid, impl=attn_impl)
+            return (h, aux_total + aux), (nk, nv)
+        lp = lp_and_cache
+        h, (nk, nv), aux = _layer_apply(
+            h, lp, cfg, positions=positions, mode=mode, cache_kv=None,
+            lengths=lengths, kv_valid=kv_valid, impl=attn_impl)
+        if mode == "prefill":
+            return (h, aux_total + aux), (nk, nv)
+        return (h, aux_total + aux), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = params["layers"] if mode != "decode" else (
+        params["layers"], cache["k"], cache["v"])
+    (h, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    new_cache = None
+    if mode == "decode":
+        nk, nv = ys
+        new_cache = {"k": nk, "v": nv, "lengths": lengths + 1}
+    elif mode == "prefill":
+        nk, nv = ys  # (L, B, S, KV, D)
+        W = attn.cache_window(cfg.attention, cfg.max_seq_len)
+        new_cache = {"computed_k": nk, "computed_v": nv}
+    return h, new_cache, aux
+
+
+def fill_cache_from_prefill(cfg: ModelConfig, computed_k, computed_v,
+                            prefill_len: int, max_len: int,
+                            lengths: Optional[jnp.ndarray] = None) -> Dict:
+    """Build a decode cache from prefill-computed K/V (ring-aware for SWA)."""
+    L, B, S, KV, D = computed_k.shape
+    W = attn.cache_window(cfg.attention, max_len)
+    keep = min(S, W)
+    src_k = computed_k[:, :, S - keep:]
+    src_v = computed_v[:, :, S - keep:]
+    slots = (jnp.arange(keep) + (S - keep)) % W
+    ck = jnp.zeros((L, B, W, KV, D), computed_k.dtype).at[:, :, slots].set(src_k)
+    cv = jnp.zeros((L, B, W, KV, D), computed_v.dtype).at[:, :, slots].set(src_v)
+    if lengths is None:
+        lengths = jnp.full((B,), prefill_len, jnp.int32)
+    return {"k": ck, "v": cv, "lengths": lengths}
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    e = params["embed"][tokens]
+    e = constrain(e, ("batch", "seq", "embed"))
+    return e.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+
+def lm_logits(params, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,vd->...v", h, head.astype(h.dtype))
+    return constrain(logits, ("batch", "seq", "vocab"))

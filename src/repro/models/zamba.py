@@ -1,0 +1,195 @@
+"""Zamba2 hybrid stack: Mamba2 backbone + shared attention blocks.
+
+Every ``shared_attn_every`` backbone layers, one of ``shared_attn_copies``
+alternating shared transformer blocks (attention + MLP) is applied, each
+application with its own KV-cache slot. The backbone scan uses
+``lax.cond`` so the body compiles once.
+
+Deviation from the released Zamba2 (documented in DESIGN.md): the shared
+block input is the residual stream (not concat(embedding, hidden)), and
+per-application LoRA adapters are omitted.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, embed_init,
+                                 mlp_params, norm_params)
+from repro.models.mamba import mamba_block, mamba_block_params, mamba_state_shapes
+from repro.distributed.axes import constrain
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    every = cfg.zamba.shared_attn_every
+    return (cfg.n_layers + every - 1) // every
+
+
+def init_zamba(key, cfg: ModelConfig) -> Dict:
+    k_emb, k_layers, k_shared, k_final = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: mamba_block_params(k, cfg))(layer_keys)
+
+    def shared_block(k):
+        ks = jax.random.split(k, 4)
+        return {
+            "attn_norm": norm_params(ks[0], cfg.d_model, cfg.norm),
+            "attn": attn.attn_params(ks[1], cfg.d_model, cfg.attention),
+            "mlp_norm": norm_params(ks[2], cfg.d_model, cfg.norm),
+            "mlp": mlp_params(ks[3], cfg.d_model, cfg.mlp.d_ff, cfg.mlp.gated),
+        }
+
+    shared_keys = jax.random.split(k_shared, cfg.zamba.shared_attn_copies)
+    shared = jax.vmap(shared_block)(shared_keys)
+    return {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": norm_params(k_final, cfg.d_model, cfg.norm),
+        "lm_head": embed_init(jax.random.fold_in(k_emb, 1),
+                              cfg.vocab_size, cfg.d_model),
+    }
+
+
+def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    n_app = n_shared_applications(cfg)
+    W = attn.cache_window(cfg.attention, max_len)
+    a = cfg.attention
+    ss = mamba_state_shapes(cfg, batch)
+    return {
+        "k": jnp.zeros((n_app, batch, W, a.n_kv_eff, a.head_dim), dtype),
+        "v": jnp.zeros((n_app, batch, W, a.n_kv_eff, a.head_dim), dtype),
+        "conv_x": jnp.zeros(ss["conv_x"], dtype),
+        "conv_bc": jnp.zeros(ss["conv_bc"], dtype),
+        "ssm": jnp.zeros(ss["ssm"], jnp.float32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _shared_apply(x, sp, cfg: ModelConfig, *, positions, mode, cache_kv,
+                  lengths, kv_valid, impl):
+    h = apply_norm(x, sp["attn_norm"], cfg.norm, cfg.norm_eps)
+    a_out, new_kv = attn.attention_block(
+        h, sp["attn"], cfg.attention, positions=positions, mode=mode,
+        cache=cache_kv, lengths=lengths, kv_valid=kv_valid, impl=impl)
+    x = x + a_out
+    h = apply_norm(x, sp["mlp_norm"], cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(h, sp["mlp"], cfg.mlp.activation, cfg.mlp.gated)
+    return x, new_kv
+
+
+def zamba_forward(params, cfg: ModelConfig, x, *, positions,
+                  mode: str = "train", cache: Optional[Dict] = None,
+                  kv_valid: Optional[jnp.ndarray] = None,
+                  remat: bool = False, attn_impl: str = "auto",
+                  remat_policy: str = "minimal"):
+    """x: (B,S,D). Returns (hidden, new_cache, aux=0)."""
+    every = cfg.zamba.shared_attn_every
+    copies = cfg.zamba.shared_attn_copies
+    n_app = n_shared_applications(cfg)
+    B, S, _ = x.shape
+    lengths = cache["lengths"] if cache is not None else None
+    decode = mode == "decode"
+    a = cfg.attention
+
+    if cache is not None:
+        cx0, cbc0, ssm0 = cache["conv_x"], cache["conv_bc"], cache["ssm"]
+        kc0, vc0 = cache["k"], cache["v"]
+    else:
+        ss = mamba_state_shapes(cfg, B)
+        cx0 = jnp.zeros(ss["conv_x"], x.dtype)
+        cbc0 = jnp.zeros(ss["conv_bc"], x.dtype)
+        ssm0 = jnp.zeros(ss["ssm"], jnp.float32)
+        if mode == "prefill":
+            # raw computed K/V per application; caller builds the ring cache
+            kc0 = jnp.zeros((n_app, B, S, a.n_kv_eff, a.head_dim), x.dtype)
+            vc0 = jnp.zeros_like(kc0)
+        else:
+            kc0 = vc0 = None
+
+    def mamba_body(h, inp):
+        lp, cx_s, cbc_s, ssm_s = inp
+        h, (new_cx, new_cbc), new_ssm = mamba_block(
+            h, lp, cfg, conv_state=(cx_s, cbc_s), ssm_state=ssm_s,
+            mode="decode" if decode else "train")
+        h = constrain(h, ("batch", "seq", "embed"))
+        return h, (new_cx, new_cbc, new_ssm)
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat_policy == "dots" else None)
+        mamba_body = jax.checkpoint(mamba_body, policy=policy)
+
+    # Segment structure (python loop => exact HLO op counts for roofline):
+    # for each application g: shared attn block (copy g % copies), then a
+    # lax.scan over the next `every` mamba layers.
+    h = x
+    kc, vc = kc0, vc0
+    new_cx_segs, new_cbc_segs, new_ssm_segs = [], [], []
+    for g in range(n_app):
+        lo = g * every
+        hi = min((g + 1) * every, cfg.n_layers)
+        sp = jax.tree.map(lambda q: q[g % copies], params["shared"])
+        if mode == "train":
+            h, _ = _shared_apply(h, sp, cfg, positions=positions, mode=mode,
+                                 cache_kv=None, lengths=lengths,
+                                 kv_valid=kv_valid, impl=attn_impl)
+        elif decode:
+            h, (nk, nv) = _shared_apply(
+                h, sp, cfg, positions=positions, mode=mode,
+                cache_kv=(kc[g], vc[g]), lengths=lengths,
+                kv_valid=kv_valid, impl=attn_impl)
+            kc = kc.at[g].set(nk)
+            vc = vc.at[g].set(nv)
+        else:  # prefill
+            h, (nk, nv) = _shared_apply(
+                h, sp, cfg, positions=positions, mode=mode,
+                cache_kv=None, lengths=lengths,
+                kv_valid=kv_valid, impl=attn_impl)
+            kc = kc.at[g].set(nk.astype(kc.dtype))
+            vc = vc.at[g].set(nv.astype(vc.dtype))
+        xs = (jax.tree.map(lambda t: t[lo:hi], params["layers"]),
+              cx0[lo:hi], cbc0[lo:hi], ssm0[lo:hi])
+        h, (cx_seg, cbc_seg, ssm_seg) = jax.lax.scan(mamba_body, h, xs)
+        new_cx_segs.append(cx_seg)
+        new_cbc_segs.append(cbc_seg)
+        new_ssm_segs.append(ssm_seg)
+
+    new_cx = jnp.concatenate(new_cx_segs, axis=0)
+    new_cbc = jnp.concatenate(new_cbc_segs, axis=0)
+    new_ssm = jnp.concatenate(new_ssm_segs, axis=0)
+
+    new_cache = None
+    if decode:
+        new_cache = {"k": kc, "v": vc, "conv_x": new_cx,
+                     "conv_bc": new_cbc, "ssm": new_ssm,
+                     "lengths": lengths + 1}
+    elif mode == "prefill":
+        new_cache = {"computed_k": kc, "computed_v": vc,
+                     "conv_x": new_cx, "conv_bc": new_cbc, "ssm": new_ssm}
+    return h, new_cache, jnp.zeros((), jnp.float32)
+
+
+def fill_zamba_cache_from_prefill(cfg: ModelConfig, pre: Dict, prefill_len: int,
+                                  max_len: int, batch: int,
+                                  dtype=jnp.bfloat16) -> Dict:
+    """Convert prefill outputs into a ring decode cache."""
+    a = cfg.attention
+    W = attn.cache_window(a, max_len)
+    ck_raw, cv_raw = pre["computed_k"], pre["computed_v"]
+    S = ck_raw.shape[2]
+    keep = min(S, W)
+    slots = (jnp.arange(keep) + (S - keep)) % W
+    n_app = ck_raw.shape[0]
+    ck = jnp.zeros((n_app, batch, W, a.n_kv_eff, a.head_dim), dtype)
+    cv = jnp.zeros_like(ck)
+    ck = ck.at[:, :, slots].set(ck_raw[:, :, S - keep:].astype(dtype))
+    cv = cv.at[:, :, slots].set(cv_raw[:, :, S - keep:].astype(dtype))
+    return {"k": ck, "v": cv, "conv_x": pre["conv_x"],
+            "conv_bc": pre["conv_bc"], "ssm": pre["ssm"],
+            "lengths": jnp.full((batch,), prefill_len, jnp.int32)}

@@ -1,0 +1,14 @@
+from repro.sim.execmodel import ExecModelConfig, ExecutionModel, StageCost
+from repro.sim.requests import Request, WorkloadConfig, generate
+from repro.sim.scheduler import ReplicaScheduler, RoundRobinRouter, SchedulerConfig
+from repro.sim.simulator import (SimConfig, SimResult, StageLog, energy_report,
+                                 run_simulation)
+from repro.sim.defaults import INTEGRATION_DEFAULT, PAPER_DEFAULT, PAPER_PUE
+
+__all__ = [
+    "ExecModelConfig", "ExecutionModel", "StageCost",
+    "Request", "WorkloadConfig", "generate",
+    "ReplicaScheduler", "RoundRobinRouter", "SchedulerConfig",
+    "SimConfig", "SimResult", "StageLog", "energy_report", "run_simulation",
+    "INTEGRATION_DEFAULT", "PAPER_DEFAULT", "PAPER_PUE",
+]

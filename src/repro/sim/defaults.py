@@ -1,0 +1,31 @@
+"""Paper Table 1 default parameterizations."""
+from repro.configs.paper_models import LLAMA3_8B, LLAMA2_7B
+from repro.sim.execmodel import ExecModelConfig
+from repro.sim.requests import WorkloadConfig
+from repro.sim.scheduler import SchedulerConfig
+from repro.sim.simulator import SimConfig
+
+# Table 1(a): default Vidur configuration
+PAPER_DEFAULT = SimConfig(
+    model=LLAMA3_8B,
+    device="a100",
+    n_replicas=1, tp=1, pp=1,
+    workload=WorkloadConfig(n_requests=1024, qps=6.45, arrival="poisson",
+                            length_dist="zipf", zipf_theta=0.6,
+                            min_len=128, max_len=4096, pd_ratio=20.0,
+                            seed=0),
+    scheduler=SchedulerConfig(batch_cap=128, max_tokens=4096),
+)
+
+# Table 1(b): Vidur-Vessim integration case study
+INTEGRATION_DEFAULT = SimConfig(
+    model=LLAMA2_7B,
+    device="a100",
+    n_replicas=1, tp=1, pp=1,
+    workload=WorkloadConfig(n_requests=400_000, qps=20.0, arrival="poisson",
+                            length_dist="zipf", zipf_theta=0.6,
+                            min_len=1024, max_len=4096, pd_ratio=20.0,
+                            seed=7),
+    scheduler=SchedulerConfig(batch_cap=128, max_tokens=4096),
+)
+PAPER_PUE = 1.2

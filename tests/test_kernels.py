@@ -1,0 +1,135 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_reference)
+from repro.kernels.gla_scan import gla_scan, gla_scan_reference
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 4, 4, 64),
+    (2, 256, 4, 2, 64),
+    (1, 200, 8, 1, 32),     # unpadded seq, MQA
+    (2, 64, 6, 3, 80),      # odd heads / head_dim (smollm/danube families)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(B, S, H, KV, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    ref = tr(attention_reference(tr(q), tr(k), tr(v), causal=causal,
+                                 window=window))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,W,H,KV,D", [
+    (2, 512, 8, 2, 64),
+    (1, 1024, 4, 4, 128),
+    (3, 300, 6, 3, 80),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, W, H, KV, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, W, KV, D), dtype)
+    vc = jax.random.normal(ks[2], (B, W, KV, D), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, W + 1)
+    out = decode_attention(q, kc, vc, lengths)
+    ref = decode_attention_reference(
+        q.reshape(B, KV, H // KV, D), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), lengths).reshape(B, 1, H, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ring_window():
+    """SWA ring cache: all slots valid once lengths >= window."""
+    B, W, H, KV, D = 2, 256, 4, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, W, KV, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, W, KV, D), jnp.float32)
+    lengths = jnp.array([W + 57, 100])  # one wrapped, one not
+    out = decode_attention(q, kc, vc, lengths, window=W)
+    ref = decode_attention_reference(
+        q.reshape(B, KV, 1, D), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), lengths, window=W).reshape(B, 1, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# gla_scan (RWKV6 + Mamba2/SSD modes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,K,V", [
+    (1, 64, 2, 32, 32),
+    (2, 130, 2, 64, 64),    # unpadded T
+    (1, 256, 4, 16, 64),    # K != V (mamba: K=d_state, V=head_dim)
+])
+@pytest.mark.parametrize("mode", ["ssd", "rwkv"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gla_scan_sweep(B, T, H, K, V, mode, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, T, H, K), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, K), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, V), dtype)
+    # realistic decay range incl. strong decay (stability regression test)
+    log_w = -jnp.exp(jax.random.uniform(ks[3], (B, T, H, K),
+                                        minval=-6.0, maxval=2.5))
+    u = 0.3 * jax.random.normal(ks[4], (H, K), dtype) if mode == "rwkv" else None
+    o, s = gla_scan(q, k, v, log_w.astype(dtype), u=u, mode=mode, chunk=32)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    o_ref, s_ref = gla_scan_reference(tr(q), tr(k), tr(v),
+                                      tr(log_w.astype(dtype)), u=u, mode=mode)
+    o_ref = tr(o_ref)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(s, np.float32),
+                               np.asarray(s_ref, np.float32), **tol)
+
+
+def test_gla_chunked_xla_matches_reference():
+    """The model-layer chunked XLA path must match the exact scan too."""
+    from repro.models.linear_attention import gla_chunked, gla_reference
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    B, T, H, K, V = 2, 100, 2, 32, 48
+    q = jax.random.normal(ks[0], (B, T, H, K))
+    k = jax.random.normal(ks[1], (B, T, H, K))
+    v = jax.random.normal(ks[2], (B, T, H, V))
+    log_w = -jnp.exp(jax.random.uniform(ks[3], (B, T, H, K), minval=-6.0,
+                                        maxval=3.0))
+    u = 0.3 * jax.random.normal(ks[4], (H, K))
+    for mode, uu in (("ssd", None), ("rwkv", u)):
+        o_c, s_c = gla_chunked(q, k, v, log_w, u=uu, mode=mode, chunk=16)
+        o_r, s_r = gla_reference(q, k, v, log_w, u=uu, mode=mode)
+        np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_r),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                                   rtol=1e-4, atol=1e-4)

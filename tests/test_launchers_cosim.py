@@ -1,0 +1,105 @@
+"""Launcher smoke tests (SPMD on forced host devices) + cosim pipeline
+integration + extra property tests."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PowerModel, run_cosim, stages_to_load_signal
+from repro.core.datasets import carbon_intensity_signal, solar_signal
+from repro.core.signals import Signal
+from repro.sim import energy_report, run_simulation
+from repro.sim.requests import WorkloadConfig
+from repro.sim.scheduler import SchedulerConfig
+from repro.sim.simulator import SimConfig
+from repro.configs.paper_models import LLAMA3_8B
+
+
+def _run(cmd, timeout=420):
+    return subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "XLA_FLAGS":
+                               "--xla_force_host_platform_device_count=8"})
+
+
+def test_train_launcher_spmd(tmp_path):
+    r = _run([sys.executable, "-m", "repro.launch.train",
+              "--arch", "stablelm-1.6b", "--reduced", "--steps", "4",
+              "--mesh", "2x4", "--ckpt-dir", str(tmp_path / "ck")])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: step 4" in r.stdout
+
+
+def test_serve_launcher():
+    r = _run([sys.executable, "-m", "repro.launch.serve",
+              "--arch", "zamba2-1.2b", "--requests", "2",
+              "--new-tokens", "3"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "gCO2" in r.stdout
+
+
+def test_dryrun_cell_subprocess():
+    """The dry-run entrypoint itself (512 forced devices, real mesh)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "stablelm-1.6b", "--shape", "decode_32k"],
+        capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert '"compile_s"' in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# sim -> energy -> cosim pipeline integration
+# ---------------------------------------------------------------------------
+
+def test_full_pipeline_energy_consistency():
+    """Co-sim total demand == Eq.3 energy (same trace, fine bins).
+
+    Note on Eq. 5 semantics: duration-weighted binning yields a POWER
+    profile; for coarse bins that are only partially occupied this
+    overestimates energy (the paper's traces occupy every 1-min bin, so
+    it is exact there). At 1 s resolution the discrepancy vanishes."""
+    cfg = SimConfig(model=LLAMA3_8B,
+                    workload=WorkloadConfig(n_requests=64, qps=4.0),
+                    scheduler=SchedulerConfig(batch_cap=16))
+    res = run_simulation(cfg)
+    rep = energy_report(res, pue=1.0)
+    pm = PowerModel("a100")
+    load = stages_to_load_signal(res.stages.start_s, res.stages.dur_s,
+                                 res.stages.mfu, pm, n_devices=1, pue=1.0,
+                                 resolution_s=1.0)
+    # pure-grid cosim (no solar) so demand == load integral
+    T_h = len(load.values) / 3600.0
+    solar = solar_signal(max(T_h, 0.02), capacity_w=0.0)
+    ci = carbon_intensity_signal(max(T_h, 0.02))
+    import dataclasses as _dc
+    from repro.core.microgrid import MicrogridConfig
+    out = run_cosim(load, solar, ci, _dc.replace(MicrogridConfig(),
+                                                 step_s=1.0))
+    assert out.metrics["total_energy_kwh"] * 1000 == pytest.approx(
+        rep.energy_wh, rel=0.10)
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_energy_report_identity(seed):
+    """Eq. 3: energy == sum_i P(mfu_i) * dt_i / 3600 (vectorized check)."""
+    rng = np.random.default_rng(seed)
+    n = rng.integers(1, 50)
+    mfu = rng.uniform(0, 1, n)
+    dt = rng.uniform(0.001, 10.0, n)
+    pm = PowerModel("h100")
+    from repro.core.energy import operational_energy
+    rep = operational_energy(mfu, dt, pm, n_devices=3, pue=1.5)
+    expected = float(np.sum(np.asarray(pm.power(mfu)) * dt) / 3600 * 3 * 1.5)
+    assert rep.energy_wh == pytest.approx(expected, rel=1e-6)
+
+
+def test_signal_resample_previous():
+    s = Signal(np.array([0.0, 60.0, 120.0]), np.array([1.0, 2.0, 3.0]))
+    r = s.resample(30.0)
+    np.testing.assert_allclose(r.values, [1, 1, 2, 2, 3])

@@ -1,0 +1,108 @@
+"""Paper-core unit + property tests: Eqs. 1-5."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEVICES, PowerModel, Signal, aggregate_power,
+                        emissions, operational_energy, power, stage_mfu)
+from repro.core.power import A100_SXM, H100_SXM, TPU_V5E
+
+
+# ---------------------------- Eq. 1 ----------------------------
+
+def test_power_calibration_points():
+    """Idle and saturation anchor points from the paper's calibration."""
+    assert float(power(0.0, A100_SXM)) == pytest.approx(100.0)
+    assert float(power(0.45, A100_SXM)) == pytest.approx(400.0)
+    assert float(power(1.0, A100_SXM)) == pytest.approx(400.0)  # clamped
+    assert float(power(0.0, H100_SXM)) == pytest.approx(60.0)
+    assert float(power(0.45, H100_SXM)) == pytest.approx(700.0)
+
+
+def test_power_sublinear():
+    """gamma < 1: half the MFU costs MORE than half the dynamic power."""
+    p_half = float(power(0.225, A100_SXM)) - 100.0
+    p_full = float(power(0.45, A100_SXM)) - 100.0
+    assert p_half > 0.5 * p_full
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_power_monotone_bounded(m1, m2):
+    for dev in (A100_SXM, H100_SXM, TPU_V5E):
+        p1, p2 = float(power(m1, dev)), float(power(m2, dev))
+        assert dev.p_idle <= p1 <= dev.p_max_inst + 1e-6
+        if m1 <= m2:
+            assert p1 <= p2 + 1e-6
+
+
+# ---------------------------- Eqs. 2-3 ----------------------------
+
+def test_stage_mfu():
+    dev = A100_SXM
+    # 312 TFLOPs in 1s at peak => MFU 1.0
+    mfu = stage_mfu(np.array([dev.peak_flops / 2]),
+                    np.array([dev.peak_flops / 2]), np.array([1.0]), dev)
+    assert mfu[0] == pytest.approx(1.0)
+
+
+def test_operational_energy_pue():
+    pm = PowerModel("a100")
+    rep1 = operational_energy(np.array([0.45]), np.array([3600.0]), pm,
+                              n_devices=1, pue=1.0)
+    rep2 = operational_energy(np.array([0.45]), np.array([3600.0]), pm,
+                              n_devices=2, pue=1.2)
+    assert rep1.energy_wh == pytest.approx(400.0)       # 400 W for 1 h
+    assert rep2.energy_wh == pytest.approx(400.0 * 2 * 1.2)
+    assert rep2.gpu_hours == pytest.approx(2.0)
+
+
+# ---------------------------- Eq. 4 ----------------------------
+
+def test_emissions_static_ci():
+    rep = emissions(energy_wh=1000.0, gpu_hours=10.0, device=A100_SXM,
+                    ci=400.0)
+    assert rep.operational_g == pytest.approx(400.0)
+    assert rep.embodied_g == pytest.approx(
+        10.0 * A100_SXM.embodied_kg_per_hour * 1000.0)
+
+
+def test_emissions_time_varying_ci():
+    t = np.arange(0, 3600, 60.0)
+    load = Signal(t, np.full_like(t, 1000.0))         # 1 kW constant
+    ci = Signal(t, np.where(t < 1800, 100.0, 300.0))  # step change
+    rep = emissions(0, 0, A100_SXM, ci, power_signal=load)
+    assert rep.operational_g == pytest.approx(200.0, rel=0.05)
+
+
+# ---------------------------- Eq. 5 ----------------------------
+
+def test_aggregate_power_weighted():
+    """Two stages in one bin: duration-weighted average."""
+    sig = aggregate_power(np.array([0.0, 10.0]), np.array([10.0, 30.0]),
+                          np.array([100.0, 300.0]), resolution_s=60.0)
+    assert sig.values[0] == pytest.approx((100 * 10 + 300 * 30) / 40)
+
+
+def test_aggregate_power_straddle():
+    """A stage straddling a bin edge contributes per-overlap."""
+    sig = aggregate_power(np.array([30.0]), np.array([60.0]),
+                          np.array([200.0]), resolution_s=60.0)
+    assert len(sig.values) == 2
+    assert sig.values[0] == pytest.approx(200.0)
+    assert sig.values[1] == pytest.approx(200.0)
+
+
+@given(st.lists(st.tuples(st.floats(0, 1000), st.floats(0.1, 100),
+                          st.floats(0, 500)), min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_aggregate_power_bounds(stages):
+    """Binned power is bounded by the min/max stage power (weighted avg)."""
+    start = np.array([s[0] for s in stages])
+    dur = np.array([s[1] for s in stages])
+    p = np.array([s[2] for s in stages])
+    sig = aggregate_power(start, dur, p, resolution_s=60.0)
+    nz = sig.values[sig.values > 0]
+    if len(nz):
+        assert nz.max() <= p.max() + 1e-6
+        assert nz.min() >= p.min() - 1e-6
