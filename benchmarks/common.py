@@ -1,67 +1,22 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers: timing + the bridge to the sweep engine.
+
+The actual grid declarations and paper-claim checks live in
+``repro.sweep.scenarios``; the per-figure scripts in this package are
+thin entry points that keep the historical ``run() -> (rows, derived,
+us)`` contract for ``benchmarks.run``.
+
+Environment knobs:
+  REPRO_SWEEP_WORKERS   scenario-level process parallelism (default 1)
+  REPRO_SWEEP_NO_CACHE  set to disable result memoization
+  REPRO_SWEEP_CACHE     cache root (default results/sweep_cache)
+"""
 from __future__ import annotations
 
-import dataclasses
+import os
+import sys
 import time
-from typing import Dict, List
 
-import numpy as np
-
-from repro.sim import PAPER_DEFAULT, energy_report, run_simulation
-from repro.sim.requests import WorkloadConfig
-
-
-def sim_with(qps=None, n_requests=None, model=None, batch_cap=None,
-             pd_ratio=None, min_len=None, max_len=None, tp=None, pp=None,
-             device=None, seed=None, base=None):
-    """PAPER_DEFAULT with overrides."""
-    cfg = base or PAPER_DEFAULT
-    wl = cfg.workload
-    wl_kw = {}
-    if qps is not None:
-        wl_kw["qps"] = qps
-    if n_requests is not None:
-        wl_kw["n_requests"] = n_requests
-    if pd_ratio is not None:
-        wl_kw["pd_ratio"] = pd_ratio
-    if min_len is not None:
-        wl_kw["min_len"] = min_len
-    if max_len is not None:
-        wl_kw["max_len"] = max_len
-    if seed is not None:
-        wl_kw["seed"] = seed
-    if wl_kw:
-        wl = dataclasses.replace(wl, **wl_kw)
-    kw = {"workload": wl}
-    if model is not None:
-        kw["model"] = model
-    if tp is not None:
-        kw["tp"] = tp
-    if pp is not None:
-        kw["pp"] = pp
-    if device is not None:
-        kw["device"] = device
-    if batch_cap is not None:
-        kw["scheduler"] = dataclasses.replace(cfg.scheduler,
-                                              batch_cap=batch_cap)
-    return dataclasses.replace(cfg, **kw)
-
-
-def run_and_report(cfg, pue: float = 1.2) -> Dict[str, float]:
-    res = run_simulation(cfg)
-    rep = energy_report(res, pue=pue)
-    return {
-        "avg_mfu": res.avg_mfu(),
-        "avg_power_w": rep.avg_power_w,
-        "energy_wh": rep.energy_wh,
-        "duration_s": rep.duration_s,
-        "throughput_qps": res.throughput_qps(),
-        "gpu_hours": rep.gpu_hours,
-        "n_stages": len(res.stages.dur_s),
-        "avg_batch": float(np.mean(res.stages.batch_size))
-        if len(res.stages.batch_size) else 0.0,
-        "_result": res,
-    }
+from repro.sweep import ResultCache, SWEEPS, run_sweep
 
 
 class Timer:
@@ -71,3 +26,36 @@ class Timer:
 
     def __exit__(self, *a):
         self.elapsed_us = (time.time() - self.t0) * 1e6
+
+
+def run_paper_sweep(name: str, smoke: bool = False, n_requests=None,
+                    workers=None):
+    """Execute one named paper sweep; returns (rows, derived, us)."""
+    if workers is None:
+        workers = int(os.environ.get("REPRO_SWEEP_WORKERS", "1"))
+    cache = (None if os.environ.get("REPRO_SWEEP_NO_CACHE")
+             else ResultCache())
+    with Timer() as t:
+        records, _stats, derived = run_sweep(
+            name, smoke=smoke, n_requests=n_requests, workers=workers,
+            cache=cache)
+    return SWEEPS[name].make_rows(records), derived, t.elapsed_us
+
+
+def bench_main(name: str) -> None:
+    """Default __main__ body for the per-figure scripts."""
+    from repro.sweep.report import format_rows
+    args = sys.argv[1:]
+    bad = [a for a in args if a != "--smoke"]
+    if bad:
+        print(f"unknown argument(s): {' '.join(bad)} "
+              f"(only --smoke is supported)", file=sys.stderr)
+        sys.exit(2)
+    smoke = "--smoke" in args
+    rows, derived, _ = run_paper_sweep(name, smoke=smoke)
+    if isinstance(rows, dict):
+        for k, v in rows.items():
+            print(f"{k:28s} {v:10.2f}")
+    else:
+        print(format_rows(rows))
+    print(derived)

@@ -4,39 +4,17 @@ Paper claims: average per-GPU power ranges 213.2-355.3 W, peaking at
 TP=2/PP=1 and dropping with higher parallelism; energy 0.16-0.56 kWh;
 most efficient setups are TP=2/PP=1 and TP=1/PP=2 — runtime reduction
 beats power minimization.
+
+Grid declaration: ``repro.sweep.scenarios`` ("exp5").
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, run_and_report, sim_with
-from repro.configs.paper_models import CODELLAMA_34B
-
-GRID = [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (2, 4), (4, 1), (4, 2),
-        (4, 4)]
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(n_requests: int = 256):
-    rows = []
-    with Timer() as t:
-        for tp, pp in GRID:
-            r = run_and_report(sim_with(model=CODELLAMA_34B, tp=tp, pp=pp,
-                                        n_requests=n_requests, qps=3.0))
-            rows.append({"tp": tp, "pp": pp,
-                         "avg_power_w": r["avg_power_w"],
-                         "energy_wh": r["energy_wh"],
-                         "duration_s": r["duration_s"]})
-    best = min(rows, key=lambda r: r["energy_wh"])
-    pmax = max(rows, key=lambda r: r["avg_power_w"])
-    derived = (f"P_range={min(r['avg_power_w'] for r in rows):.0f}-"
-               f"{max(r['avg_power_w'] for r in rows):.0f}W"
-               f"(paper:213-355);peak_at=TP{pmax['tp']}PP{pmax['pp']}"
-               f"(paper:TP2PP1);best=TP{best['tp']}PP{best['pp']}"
-               f"(paper:TP2PP1 or TP1PP2)")
-    return rows, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("exp5", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    rows, derived, _ = run()
-    for r in rows:
-        print(f"TP={r['tp']} PP={r['pp']}: P={r['avg_power_w']:6.1f}W "
-              f"E={r['energy_wh']:8.2f}Wh dur={r['duration_s']:7.1f}s")
-    print(derived)
+    bench_main("exp5")

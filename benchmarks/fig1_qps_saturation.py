@@ -2,29 +2,17 @@
 
 Paper claim: MFU increases with QPS and plateaus near mfu_sat = 0.45 at
 5-7.9 QPS on A100.
+
+Grid declaration: ``repro.sweep.scenarios`` ("fig1").
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, run_and_report, sim_with
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(n_requests: int = 512):
-    qps_grid = [0.5, 1.0, 2.0, 3.0, 5.0, 6.45, 7.9, 10.0, 12.6]
-    rows = []
-    with Timer() as t:
-        for qps in qps_grid:
-            r = run_and_report(sim_with(qps=qps, n_requests=n_requests))
-            rows.append({"qps": qps, "avg_mfu": r["avg_mfu"],
-                         "avg_power_w": r["avg_power_w"]})
-    sat = [r["avg_mfu"] for r in rows if 5.0 <= r["qps"] <= 7.9]
-    derived = (f"mfu@5-7.9qps={min(sat):.3f}-{max(sat):.3f}"
-               f";paper=saturates~0.45")
-    return rows, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("fig1", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    rows, derived, _ = run()
-    for r in rows:
-        print(f"qps={r['qps']:5.2f} mfu={r['avg_mfu']:.3f} "
-              f"P={r['avg_power_w']:.0f}W")
-    print(derived)
+    bench_main("fig1")

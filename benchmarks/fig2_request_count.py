@@ -4,65 +4,20 @@ Paper claims: avg power stable at 135-155 W (models <= 34B, TP1/PP1) and
 125-127.5 W (70B+, TP2/PP2); energy linear in request count; at 2^16
 requests CodeLlama-34B ~16 kWh, 70B+ > 80 kWh.
 
-Energy linearity is verified on 2^8..2^12 and extrapolated to 2^16 (the
-full 65k-request sims are minutes each on CPU; the extrapolation slope is
-the claim under test anyway).
+Energy linearity is verified on the simulated counts and extrapolated to
+2^16 (the full 65k-request sims are minutes each on CPU; the
+extrapolation slope is the claim under test anyway).
+
+Grid declaration: ``repro.sweep.scenarios`` ("fig2").
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Timer, run_and_report, sim_with
-from repro.configs.paper_models import (CODELLAMA_34B, LLAMA3_8B, LLAMA3_70B,
-                                        PHI2_2_7B, QWEN_72B)
-
-MODELS = [
-    ("phi2-2.7b", PHI2_2_7B, 1, 1),
-    ("llama3-8b", LLAMA3_8B, 1, 1),
-    ("codellama-34b", CODELLAMA_34B, 1, 1),
-    ("llama3-70b", LLAMA3_70B, 2, 2),
-    ("qwen-72b", QWEN_72B, 2, 2),
-]
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(counts=(256, 1024, 4096)):
-    rows = []
-    with Timer() as t:
-        for name, model, tp, pp in MODELS:
-            energies, powers = [], []
-            for n in counts:
-                r = run_and_report(sim_with(model=model, tp=tp, pp=pp,
-                                            n_requests=n))
-                energies.append(r["energy_wh"])
-                powers.append(r["avg_power_w"])
-                rows.append({"model": name, "n_requests": n, **{
-                    k: v for k, v in r.items() if not k.startswith("_")}})
-            # linear fit through origin -> extrapolate to 2^16
-            slope = float(np.polyfit(counts, energies, 1)[0])
-            e_64k = slope * 65536
-            rows.append({"model": name, "n_requests": 65536,
-                         "energy_wh": e_64k, "extrapolated": True,
-                         "avg_power_w": float(np.mean(powers))})
-    small = [r for r in rows if r["model"] in
-             ("phi2-2.7b", "llama3-8b", "codellama-34b")
-             and not r.get("extrapolated")]
-    big = [r for r in rows if r["model"] in ("llama3-70b", "qwen-72b")
-           and not r.get("extrapolated")]
-    extr = {r["model"]: r["energy_wh"] for r in rows if r.get("extrapolated")}
-    derived = (f"P_small={min(x['avg_power_w'] for x in small):.0f}-"
-               f"{max(x['avg_power_w'] for x in small):.0f}W(paper:135-155);"
-               f"P_big={min(x['avg_power_w'] for x in big):.0f}-"
-               f"{max(x['avg_power_w'] for x in big):.0f}W(paper:125-127);"
-               f"E64k_34b={extr['codellama-34b']/1e3:.1f}kWh(paper~16);"
-               f"E64k_70b={extr['llama3-70b']/1e3:.1f}kWh(paper>80)")
-    return rows, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("fig2", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    rows, derived, _ = run()
-    for r in rows:
-        e = r.get("energy_wh", 0)
-        print(f"{r['model']:16s} n={r['n_requests']:6d} "
-              f"P={r.get('avg_power_w', 0):6.1f}W E={e:9.1f}Wh"
-              + (" (extrapolated)" if r.get("extrapolated") else ""))
-    print(derived)
+    bench_main("fig2")

@@ -7,41 +7,17 @@ especially for long requests; short requests barely change.
 Note on conventions: the paper plots "increasing P:D (more decode-heavy)"
 — we parameterize pd_ratio = prefill:decode, so decode-heavy = small
 pd_ratio.
+
+Grid declaration: ``repro.sweep.scenarios`` ("fig3").
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, run_and_report, sim_with
-
-PD_RATIOS = [50.0, 10.0, 2.0, 1.0, 0.5, 0.1, 0.02]
-LENGTHS = [128, 512, 1024, 4096]
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(n_requests: int = 256):
-    rows = []
-    with Timer() as t:
-        for L in LENGTHS:
-            for pd in PD_RATIOS:
-                r = run_and_report(sim_with(pd_ratio=pd, min_len=L, max_len=L,
-                                            n_requests=n_requests))
-                rows.append({"length": L, "pd_ratio": pd,
-                             "avg_power_w": r["avg_power_w"],
-                             "energy_wh": r["energy_wh"]})
-    # checks: energy grows with length at fixed pd; decode-heavy > prefill-
-    # heavy energy at long lengths
-    e_by_len = {L: [r["energy_wh"] for r in rows if r["length"] == L]
-                for L in LENGTHS}
-    mono_len = all(sum(e_by_len[LENGTHS[i]]) < sum(e_by_len[LENGTHS[i + 1]])
-                   for i in range(len(LENGTHS) - 1))
-    long_rows = [r for r in rows if r["length"] == 4096]
-    decode_heavier = (long_rows[-1]["energy_wh"] > long_rows[0]["energy_wh"])
-    derived = (f"energy_monotonic_in_length={mono_len}(paper:yes);"
-               f"decode_heavy_costs_more_at_4k={decode_heavier}(paper:yes)")
-    return rows, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("fig3", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    rows, derived, _ = run()
-    for r in rows:
-        print(f"len={r['length']:5d} P:D={r['pd_ratio']:6.2f} "
-              f"P={r['avg_power_w']:6.1f}W E={r['energy_wh']:8.2f}Wh")
-    print(derived)
+    bench_main("fig3")

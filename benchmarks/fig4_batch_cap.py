@@ -3,38 +3,17 @@
 Paper claims: actual batch size grows sublinearly with the cap; average
 power rises with cap and plateaus above ~64; total energy drops with
 larger caps with diminishing returns past ~16.
+
+Grid declaration: ``repro.sweep.scenarios`` ("fig4").
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, run_and_report, sim_with
-
-CAPS = [1, 2, 4, 8, 16, 32, 64, 128]
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(n_requests: int = 256):
-    rows = []
-    with Timer() as t:
-        for cap in CAPS:
-            r = run_and_report(sim_with(batch_cap=cap, qps=50.0,
-                                        n_requests=n_requests))
-            rows.append({"cap": cap, "actual_batch": r["avg_batch"],
-                         "avg_power_w": r["avg_power_w"],
-                         "energy_wh": r["energy_wh"]})
-    sub = all(rows[i]["actual_batch"] <= CAPS[i] for i in range(len(rows)))
-    power_up = rows[-1]["avg_power_w"] > rows[0]["avg_power_w"]
-    energy_down = rows[-1]["energy_wh"] < rows[0]["energy_wh"]
-    gain_16 = rows[0]["energy_wh"] / rows[4]["energy_wh"]
-    gain_128 = rows[4]["energy_wh"] / rows[-1]["energy_wh"]
-    derived = (f"batch_sublinear={sub};power_rises={power_up}(paper:yes);"
-               f"energy_drops={energy_down}(paper:yes);"
-               f"gain1->16={gain_16:.1f}x;gain16->128={gain_128:.2f}x"
-               f"(paper:diminishing past 16)")
-    return rows, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("fig4", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    rows, derived, _ = run()
-    for r in rows:
-        print(f"cap={r['cap']:4d} batch={r['actual_batch']:6.1f} "
-              f"P={r['avg_power_w']:6.1f}W E={r['energy_wh']:8.2f}Wh")
-    print(derived)
+    bench_main("fig4")

@@ -3,35 +3,17 @@
 Paper claims (fixed workload size): average power increases with QPS and
 saturates near 360 W beyond ~5 QPS; total energy decreases with QPS and
 converges toward ~0.5 kWh beyond ~8 QPS (their 2^14-request workload).
+
+Grid declaration: ``repro.sweep.scenarios`` ("fig5").
 """
 from __future__ import annotations
 
-from benchmarks.common import Timer, run_and_report, sim_with
-
-QPS_GRID = [0.5, 1.0, 2.0, 3.2, 5.0, 7.9, 10.0, 12.6]
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(n_requests: int = 2048):
-    rows = []
-    with Timer() as t:
-        for qps in QPS_GRID:
-            r = run_and_report(sim_with(qps=qps, n_requests=n_requests))
-            rows.append({"qps": qps, "avg_power_w": r["avg_power_w"],
-                         "energy_wh": r["energy_wh"],
-                         "duration_s": r["duration_s"]})
-    p_sat = [r["avg_power_w"] for r in rows if r["qps"] >= 5.0]
-    e_hi = [r["energy_wh"] for r in rows if r["qps"] >= 7.9]
-    # scale the paper's 2^14-request 0.5 kWh convergence to our n
-    scale = n_requests / 16384
-    derived = (f"P_sat={min(p_sat):.0f}-{max(p_sat):.0f}W(paper:~360);"
-               f"E_converged={min(e_hi):.1f}Wh"
-               f"(paper~{500 * scale:.0f}Wh at this workload scale)")
-    return rows, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("fig5", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    rows, derived, _ = run()
-    for r in rows:
-        print(f"qps={r['qps']:5.1f} P={r['avg_power_w']:6.1f}W "
-              f"E={r['energy_wh']:8.2f}Wh dur={r['duration_s']:7.1f}s")
-    print(derived)
+    bench_main("fig5")

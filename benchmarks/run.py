@@ -1,7 +1,11 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (plus writes detailed rows to
-results/benchmarks/*.json).
+results/benchmarks/*.json). All entries execute through the scenario
+sweep engine (``repro.sweep``), so completed scenarios are memoized in
+the on-disk result cache and re-runs are incremental.
+
+Usage: python -m benchmarks.run [--smoke] [names...]
 """
 from __future__ import annotations
 
@@ -26,17 +30,36 @@ def main() -> None:
         ("exp5_parallelism", exp5_parallelism.run),
         ("table2_cosim", table2_cosim.run),
     ]
-    RESULTS.mkdir(parents=True, exist_ok=True)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    bad_flags = [a for a in args if a.startswith("--") and a != "--smoke"]
+    if bad_flags:
+        print(f"unknown flag(s): {' '.join(bad_flags)} "
+              f"(only --smoke is supported)", file=sys.stderr)
+        sys.exit(2)
+    names = [a for a in args if not a.startswith("--")]
+    if names:
+        benches = [(n, fn) for n, fn in benches
+                   if any(n.startswith(want) for want in names)]
+        if not benches:
+            print(f"no benchmark matches {names!r}; have "
+                  f"fig1..fig5, exp5, table2", file=sys.stderr)
+            sys.exit(2)
+    # smoke-scale rows go to their own subdir so they never shadow a
+    # full reproduction's results under the same path
+    outdir = RESULTS / "smoke" if smoke else RESULTS
+    outdir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in benches:
         try:
-            rows, derived, us = fn()
+            rows, derived, us = fn(smoke=smoke)
             print(f"{name},{us:.0f},{derived}")
             payload = rows if isinstance(rows, (list, dict)) else str(rows)
-            (RESULTS / f"{name}.json").write_text(
+            (outdir / f"{name}.json").write_text(
                 json.dumps({"rows": payload, "derived": derived,
-                            "us_per_call": us}, indent=1, default=str))
+                            "us_per_call": us, "smoke": smoke},
+                           indent=1, default=str))
         except Exception:
             failed += 1
             print(f"{name},-1,ERROR")

@@ -6,70 +6,21 @@ P:D 20), A100, CAISO-North CI, 600 W solar, 100 Wh battery (SoC 20-80%),
 70.3% renewable share, 2.47 kgCO2 total, 69.2% offset by solar.
 
 We simulate a reduced request count and tile the resulting diurnal-scale
-load to 48 h (the paper's trace spans >24 h of wall time), against
-synthetic Solcast/WattTime stand-ins (offline container; generators
-documented in repro/core/datasets.py).
+load to a 30 h window (the paper's trace spans >24 h of wall time),
+against synthetic Solcast/WattTime stand-ins (offline container;
+generators documented in repro/core/datasets.py). The paper-deviation
+rationale (5.5 QPS = 85% of our max) is documented on the table2 grid
+declaration in ``repro.sweep.scenarios``; the microgrid post-processing
+lives in ``repro.sweep.runner`` ("microgrid_cosim").
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Timer
-from repro.core import MicrogridConfig, PowerModel, run_cosim, Signal
-from repro.core.cosim import stages_to_load_signal
-from repro.core.datasets import carbon_intensity_signal, solar_signal
-from repro.core.microgrid import BatteryConfig
-from repro.sim import INTEGRATION_DEFAULT, run_simulation
-import dataclasses
+from benchmarks.common import bench_main, run_paper_sweep
 
 
-def run(n_requests: int = 110_000, hours: float = 30.0, qps: float = 5.5):
-    """Paper deviation (documented in EXPERIMENTS.md §Repro): the stated
-    20 QPS on one A100 exceeds the device's peak FLOP/s by ~1.6x for this
-    workload; Vidur's random forest extrapolated beyond its validity
-    range ("accurate near 85% of max QPS"). We reproduce the co-sim at
-    85% of OUR max QPS (5.5), preserving the 5.5 h saturated-burst shape
-    and total energy of the paper's Table 2."""
-    with Timer() as t:
-        cfg = dataclasses.replace(
-            INTEGRATION_DEFAULT,
-            workload=dataclasses.replace(INTEGRATION_DEFAULT.workload,
-                                         n_requests=n_requests, qps=qps))
-        res = run_simulation(cfg)
-        pm = PowerModel(cfg.device)
-        load = stages_to_load_signal(res.stages.start_s, res.stages.dur_s,
-                                     res.stages.mfu, pm,
-                                     n_devices=cfg.n_devices, pue=1.2,
-                                     resolution_s=60.0)
-        # place the active trace once (starting 9 am) with the idle-power
-        # floor elsewhere — the paper's 5.9 kWh spans >24 h of wall time
-        # around a ~5 h active burst
-        n_bins = int(hours * 60)
-        idle_w = pm.dev.p_idle * cfg.n_devices * 1.2
-        vals = np.full(n_bins, idle_w)
-        start_bin = int(8 * 60)  # 5.5h burst across daylight
-        n_active = min(len(load.values), n_bins - start_bin)
-        vals[start_bin:start_bin + n_active] = load.values[:n_active]
-        times = np.arange(n_bins) * 60.0
-        load48 = Signal(times, vals, interp="previous")
-
-        # CAISO June-July conditions (paper traces): low cloud cover
-        solar = solar_signal(hours, capacity_w=600.0, seed=3,
-                             cloudiness=0.12)
-        ci = carbon_intensity_signal(hours, seed=4)
-        grid_cfg = MicrogridConfig(battery=BatteryConfig(
-            capacity_wh=100.0, soc_init=0.5, soc_min=0.2, soc_max=0.8))
-        out = run_cosim(load48, solar, ci, grid_cfg)
-    m = out.metrics
-    derived = (f"renewable_share={m['renewable_share_pct']:.1f}%"
-               f"(paper:70.3);offset={m['carbon_offset_pct']:.1f}%"
-               f"(paper:69.2);E={m['total_energy_kwh']:.2f}kWh(paper:5.90);"
-               f"net={m['net_emissions_kg']*1000:.0f}g(paper:759)")
-    return m, derived, t.elapsed_us
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("table2", smoke=smoke, n_requests=n_requests)
 
 
 if __name__ == "__main__":
-    m, derived, _ = run()
-    for k, v in m.items():
-        print(f"{k:28s} {v:10.2f}")
-    print(derived)
+    bench_main("table2")

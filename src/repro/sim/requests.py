@@ -22,6 +22,7 @@ class Request:
     # runtime state
     decoded: int = 0
     prefilled: bool = False
+    prefill_done: int = 0        # prompt tokens prefilled so far (chunking)
     t_first_token: float = -1.0
     t_done: float = -1.0
 

@@ -26,6 +26,12 @@ class SchedulerConfig:
     kv_budget_tokens: int = 512 * 1024  # per-replica KV token capacity
     chunk_prefill: Optional[int] = None  # Sarathi chunk size, None = whole
 
+    def __post_init__(self):
+        if self.chunk_prefill is not None and self.chunk_prefill < 1:
+            raise ValueError(
+                f"chunk_prefill must be None or >= 1, "
+                f"got {self.chunk_prefill}")
+
 
 class ReplicaScheduler:
     def __init__(self, cfg: SchedulerConfig):
@@ -33,6 +39,11 @@ class ReplicaScheduler:
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.kv_tokens = 0
+        # prefill token counts of the batch returned by the last
+        # next_batch() call, aligned with its prefills list (== full
+        # prompt lengths when chunking is off)
+        self.last_prefill_tokens: List[int] = []
+        self._chunk_by_rid: dict = {}
 
     def add(self, req: Request):
         self.waiting.append(req)
@@ -50,20 +61,65 @@ class ReplicaScheduler:
             self.kv_tokens += r.prefill_tokens
 
     def next_batch(self) -> Tuple[List[Request], List[Request]]:
-        """Returns (prefills, decodes) for the next iteration."""
+        """Returns (prefills, decodes) for the next iteration.
+
+        The per-request prefill token counts of the returned batch are
+        exposed as ``self.last_prefill_tokens`` (chunking makes them
+        differ from the full prompt lengths).
+
+        Without chunking: prefill-only iterations take priority, then
+        decode-only iterations (the seed/vLLM behavior). With
+        ``chunk_prefill=C`` (Sarathi-style): each iteration carries at
+        most C prompt tokens of prefill work, coalesced with one decode
+        token for every already-prefilled running sequence.
+        """
         self._admit()
-        prefills = [r for r in self.running if not r.prefilled]
-        if prefills:
-            return prefills, []
-        decodes = [r for r in self.running if r.decoded < r.decode_tokens]
-        return [], decodes
+        if self.cfg.chunk_prefill is None:
+            prefills = [r for r in self.running if not r.prefilled]
+            if prefills:
+                self.last_prefill_tokens = [r.prefill_tokens
+                                            for r in prefills]
+                self._chunk_by_rid = {r.rid: r.prefill_tokens
+                                      for r in prefills}
+                return prefills, []
+            self.last_prefill_tokens = []
+            self._chunk_by_rid = {}
+            decodes = [r for r in self.running
+                       if r.decoded < r.decode_tokens]
+            return [], decodes
+
+        budget = self.cfg.chunk_prefill
+        prefills: List[Request] = []
+        chunks: List[int] = []
+        for r in self.running:
+            if budget <= 0:
+                break
+            if not r.prefilled:
+                take = min(budget, r.prefill_tokens - r.prefill_done)
+                prefills.append(r)
+                chunks.append(take)
+                budget -= take
+        decodes = [r for r in self.running
+                   if r.prefilled and r.decoded < r.decode_tokens]
+        self.last_prefill_tokens = chunks
+        self._chunk_by_rid = {r.rid: c for r, c in zip(prefills, chunks)}
+        return prefills, decodes
 
     def complete_iteration(self, prefills: List[Request],
                            decodes: List[Request], now: float):
+        # chunk sizes are attributed per request id; anything not in
+        # the last next_batch() (direct API use, retries) advances by
+        # its full remaining prompt
+        chunk_by_rid = self._chunk_by_rid
+        self._chunk_by_rid = {}
         for r in prefills:
-            r.prefilled = True
-            if r.t_first_token < 0:
-                r.t_first_token = now
+            took = chunk_by_rid.get(r.rid,
+                                    r.prefill_tokens - r.prefill_done)
+            r.prefill_done += took
+            if r.prefill_done >= r.prefill_tokens:
+                r.prefilled = True
+                if r.t_first_token < 0:
+                    r.t_first_token = now
         done = []
         for r in decodes:
             r.decoded += 1

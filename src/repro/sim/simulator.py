@@ -151,14 +151,13 @@ def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0) -> SimResult
                 continue
             break
 
-        if prefills:
-            plens = [r.prefill_tokens for r in prefills]
-            cost = exec_model.stage_cost(plens, [])
-            npt, ndt = sum(plens), 0
-        else:
-            ctxs = [r.prefill_tokens + r.decoded for r in decodes]
-            cost = exec_model.stage_cost([], ctxs)
-            npt, ndt = 0, len(decodes)
+        # chunked prefill (Sarathi) yields mixed iterations: the chunk
+        # token counts come from the scheduler, and decodes of already-
+        # prefilled sequences ride along in the same stage
+        plens = list(rep.last_prefill_tokens)
+        ctxs = [r.prefill_tokens + r.decoded for r in decodes]
+        cost = exec_model.stage_cost(plens, ctxs)
+        npt, ndt = sum(plens), len(decodes)
 
         # one record per pipeline stage (replica-stage granularity)
         for ps in range(cfg.pp):

@@ -1,0 +1,24 @@
+"""Scenario sweep engine: declarative grids over SimConfig, parallel
+execution with on-disk result memoization, tidy CSV/JSON reporting, and
+the paper's seven experiments as predefined sweeps (``repro.sweep.cli``).
+"""
+from repro.sweep.cache import ResultCache, default_cache_root
+from repro.sweep.grid import (DEFAULT_GRID_CI, SCHEMA_VERSION, GridSpec,
+                              Scenario, config_digest, derive_seed,
+                              model_registry, with_overrides)
+from repro.sweep.report import (flatten, format_rows, format_table, to_csv,
+                                to_json, write_outputs)
+from repro.sweep.runner import (POSTPROCESSORS, SweepRunner, SweepStats,
+                                execute_scenario, run_scenarios)
+from repro.sweep.scenarios import SWEEPS, SweepDef, run_sweep
+
+__all__ = [
+    "ResultCache", "default_cache_root",
+    "DEFAULT_GRID_CI", "SCHEMA_VERSION", "GridSpec", "Scenario",
+    "config_digest", "derive_seed", "model_registry", "with_overrides",
+    "flatten", "format_rows", "format_table", "to_csv", "to_json",
+    "write_outputs",
+    "POSTPROCESSORS", "SweepRunner", "SweepStats", "execute_scenario",
+    "run_scenarios",
+    "SWEEPS", "SweepDef", "run_sweep",
+]

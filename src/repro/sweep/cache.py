@@ -1,0 +1,76 @@
+"""On-disk content-addressed cache of completed scenario records.
+
+Keyed by ``Scenario.key`` (sha256 of the full config tree + runner
+knobs + schema version, see ``grid.config_digest``), so a cache entry
+is valid exactly as long as the scenario it describes is byte-identical.
+Layout: ``<root>/<key[:2]>/<key>.json`` — one JSON record per scenario.
+Writes are atomic (tmp file + rename) so parallel workers and
+interrupted runs never leave a torn entry behind.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Iterator, Optional
+
+ENV_CACHE_DIR = "REPRO_SWEEP_CACHE"
+DEFAULT_CACHE_DIR = Path("results") / "sweep_cache"
+
+
+def default_cache_root() -> Path:
+    return Path(os.environ.get(ENV_CACHE_DIR, DEFAULT_CACHE_DIR))
+
+
+class ResultCache:
+    def __init__(self, root: Optional[Path] = None):
+        self.root = Path(root) if root is not None else default_cache_root()
+
+    def path_for(self, key: str) -> Path:
+        return self.root / key[:2] / f"{key}.json"
+
+    def get(self, key: str) -> Optional[dict]:
+        path = self.path_for(key)
+        try:
+            with open(path) as f:
+                record = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+        if record.get("key") != key:        # corrupt/foreign entry
+            return None
+        return record
+
+    def put(self, key: str, record: dict) -> Path:
+        path = self.path_for(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f, default=str)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    def iter_keys(self) -> Iterator[str]:
+        if not self.root.exists():
+            return
+        for sub in sorted(self.root.iterdir()):
+            if sub.is_dir():
+                for entry in sorted(sub.glob("*.json")):
+                    yield entry.stem
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.iter_keys())
+
+    def clear(self) -> int:
+        n = 0
+        for key in list(self.iter_keys()):
+            self.path_for(key).unlink(missing_ok=True)
+            n += 1
+        return n

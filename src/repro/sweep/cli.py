@@ -1,0 +1,111 @@
+"""Unified benchmark CLI over the scenario sweep engine.
+
+Examples:
+
+    # every figure's pipeline at smoke scale (what CI runs)
+    PYTHONPATH=src python -m repro.sweep.cli --smoke all
+
+    # full Table 2 co-simulation, memoized — a repeat run is served
+    # from the cache and executes zero scenarios
+    PYTHONPATH=src python -m repro.sweep.cli table2
+
+    # fig4 across 4 worker processes, custom output dir
+    PYTHONPATH=src python -m repro.sweep.cli fig4 --workers 4 --out results/sweep
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from repro.sweep.cache import ResultCache, default_cache_root
+from repro.sweep.report import format_table, write_outputs
+from repro.sweep.scenarios import SWEEPS, run_sweep
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.sweep.cli",
+        description="Run the paper's scenario sweeps through the "
+                    "parallel, cache-memoized sweep engine.")
+    p.add_argument("sweeps", nargs="*", metavar="SWEEP",
+                   help=f"sweep names ({', '.join(SWEEPS)}) or 'all'")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny request counts + coarse grids (CI mode)")
+    p.add_argument("--n-requests", type=int, default=None,
+                   help="override per-scenario request count")
+    p.add_argument("--workers", type=int, default=1,
+                   help="scenario-level process parallelism (default 1)")
+    p.add_argument("--no-cache", action="store_true",
+                   help="disable the on-disk result cache")
+    p.add_argument("--cache-dir", type=Path, default=None,
+                   help=f"cache root (default {default_cache_root()}, "
+                        f"or $REPRO_SWEEP_CACHE)")
+    p.add_argument("--clear-cache", action="store_true",
+                   help="drop all cached scenario results, then proceed")
+    p.add_argument("--out", type=Path, default=Path("results") / "sweep",
+                   help="directory for per-sweep CSV/JSON tables")
+    p.add_argument("--list", action="store_true", dest="list_sweeps",
+                   help="list available sweeps and exit")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress per-scenario tables")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_sweeps:
+        for name, sweep in SWEEPS.items():
+            n = len(sweep.build(args.smoke, n_requests=args.n_requests))
+            print(f"{name:8s} {n:3d} scenario(s)  {sweep.title}")
+        return 0
+
+    names = list(args.sweeps)
+    if not names:
+        print("no sweeps given (use names or 'all'); --list shows options",
+              file=sys.stderr)
+        return 2
+    if names == ["all"]:
+        names = list(SWEEPS)
+    unknown = [n for n in names if n not in SWEEPS]
+    if unknown:
+        print(f"unknown sweep(s): {', '.join(unknown)}; "
+              f"available: {', '.join(SWEEPS)}", file=sys.stderr)
+        return 2
+
+    cache = None if args.no_cache else ResultCache(args.cache_dir)
+    if args.clear_cache and cache is not None:
+        print(f"cleared {cache.clear()} cached scenario(s)")
+
+    failed = []
+    for name in names:
+        t0 = time.perf_counter()
+        print(f"== {name}: {SWEEPS[name].title}"
+              + (" [smoke]" if args.smoke else ""))
+        try:
+            records, stats, derived = run_sweep(
+                name, smoke=args.smoke, n_requests=args.n_requests,
+                workers=args.workers, cache=cache,
+                progress=lambda msg: print(f"   {msg}"))
+        except Exception as exc:           # keep sweeping, report at exit
+            failed.append(name)
+            print(f"   FAILED: {type(exc).__name__}: {exc}",
+                  file=sys.stderr)
+            continue
+        paths = write_outputs(name, records, args.out, derived=derived)
+        if not args.quiet:
+            print(format_table(records))
+        print(f"   {stats.summary()}")
+        print(f"   derived: {derived}")
+        print(f"   wrote {paths['csv']} {paths['json']} "
+              f"({time.perf_counter() - t0:.2f}s)")
+    if failed:
+        print(f"failed sweeps: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,167 @@
+"""Declarative scenario grids over ``SimConfig``.
+
+A sweep is a base config plus named axes of dotted-path overrides
+("workload.qps", "scheduler.batch_cap", "tp", "model", ...). Expanding
+the grid yields ``Scenario`` objects: a fully-resolved ``SimConfig``,
+the flat axis parameters for reporting, and a stable content hash that
+keys the on-disk result cache (``repro.sweep.cache``).
+
+Joint axes sweep several fields in lockstep with a ``+``-joined key:
+
+    GridSpec(base=PAPER_DEFAULT,
+             axes={"workload.qps": [1.0, 5.0, 10.0],
+                   "tp+pp": [(1, 1), (2, 2)]})
+
+expands to 6 scenarios (cardinality = product of axis lengths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.sim.simulator import SimConfig
+
+# Bump when simulator/runner semantics change in a way that invalidates
+# previously cached scenario results.
+SCHEMA_VERSION = 1
+
+# Default static grid carbon intensity for the report's carbon columns
+# (gCO2eq/kWh; CAISO-ish annual average — the paper's co-sim case study
+# uses a time-varying CAISO-North signal instead, via the cosim post).
+DEFAULT_GRID_CI = 250.0
+
+
+def model_registry() -> Dict[str, ModelConfig]:
+    """All paper models, addressable by name in grid axes."""
+    from repro.configs import paper_models
+    return {m.name: m for m in vars(paper_models).values()
+            if isinstance(m, ModelConfig)}
+
+
+def resolve_model(value) -> ModelConfig:
+    if isinstance(value, ModelConfig):
+        return value
+    models = model_registry()
+    if value not in models:
+        raise KeyError(f"unknown model {value!r}; have {sorted(models)}")
+    return models[value]
+
+
+def with_overrides(cfg, overrides: Mapping[str, object]):
+    """dataclasses.replace along dotted paths ("workload.qps" -> 6.45)."""
+    by_head: Dict[str, Dict[str, object]] = {}
+    flat: Dict[str, object] = {}
+    for path, value in overrides.items():
+        head, _, rest = path.partition(".")
+        if rest:
+            by_head.setdefault(head, {})[rest] = value
+        else:
+            if head == "model":
+                value = resolve_model(value)
+            flat[head] = value
+    for head, sub in by_head.items():
+        flat[head] = with_overrides(getattr(cfg, head), sub)
+    return dataclasses.replace(cfg, **flat)
+
+
+def _jsonable(value):
+    if isinstance(value, ModelConfig):
+        return value.name
+    if isinstance(value, (tuple, list)):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+def config_digest(cfg: SimConfig, extra: Optional[Mapping] = None) -> str:
+    """Stable content hash of a scenario: canonical JSON of the full
+    config tree (+ runner knobs) under the current schema version."""
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "cfg": dataclasses.asdict(cfg),
+        "extra": dict(extra or {}),
+    }
+    blob = json.dumps(payload, sort_keys=True, default=str,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def derive_seed(params: Mapping[str, object]) -> int:
+    """Deterministic per-scenario workload seed from the axis values —
+    independent of execution order or process, so parallel and serial
+    sweeps sample identical workloads."""
+    blob = json.dumps({k: _jsonable(v) for k, v in params.items()},
+                      sort_keys=True, default=str)
+    return int.from_bytes(hashlib.sha256(blob.encode()).digest()[:4],
+                          "big") % (2 ** 31)
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One fully-resolved point of a sweep."""
+    cfg: SimConfig
+    params: Dict[str, object]
+    tag: str = "scenario"
+    pue: float = 1.2
+    grid_ci: float = DEFAULT_GRID_CI
+    post: Optional[str] = None            # runner post-processor name
+    post_params: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> str:
+        return config_digest(self.cfg, extra={
+            "pue": self.pue, "grid_ci": self.grid_ci,
+            "post": self.post, "post_params": self.post_params,
+        })
+
+
+@dataclasses.dataclass
+class GridSpec:
+    """Declarative parameter grid over a base SimConfig."""
+    base: SimConfig
+    axes: Mapping[str, Sequence] = dataclasses.field(default_factory=dict)
+    fixed: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    tag: str = "sweep"
+    pue: float = 1.2
+    grid_ci: float = DEFAULT_GRID_CI
+    post: Optional[str] = None
+    post_params: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    seed_per_scenario: bool = False   # derive workload.seed from params
+
+    @property
+    def cardinality(self) -> int:
+        n = 1
+        for values in self.axes.values():
+            n *= len(values)
+        return n
+
+    def expand(self) -> List[Scenario]:
+        keys = list(self.axes.keys())
+        value_lists = [self.axes[k] for k in keys]
+        scenarios: List[Scenario] = []
+        for combo in itertools.product(*value_lists):
+            overrides: Dict[str, object] = dict(self.fixed)
+            params: Dict[str, object] = {}
+            for key, value in zip(keys, combo):
+                parts = key.split("+")
+                values = value if len(parts) > 1 else (value,)
+                if len(parts) != len(values):
+                    raise ValueError(
+                        f"joint axis {key!r} expects {len(parts)}-tuples, "
+                        f"got {value!r}")
+                for part, v in zip(parts, values):
+                    overrides[part] = v
+                    # report under the leaf name ("workload.qps" -> "qps")
+                    params[part.split(".")[-1]] = _jsonable(v)
+            if self.seed_per_scenario and "workload.seed" not in overrides:
+                overrides["workload.seed"] = derive_seed(params)
+            cfg = with_overrides(self.base, overrides)
+            label = ",".join(f"{k}={params[k]}" for k in params) or "base"
+            scenarios.append(Scenario(
+                cfg=cfg, params=params, tag=f"{self.tag}/{label}",
+                pue=self.pue, grid_ci=self.grid_ci, post=self.post,
+                post_params=dict(self.post_params)))
+        return scenarios

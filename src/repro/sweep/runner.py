@@ -1,0 +1,229 @@
+"""Scenario execution: serial or multiprocessing, cache-memoized.
+
+``execute_scenario`` turns one ``Scenario`` into a flat record of the
+paper's energy/carbon summary columns (Eq. 2-4) plus latency and
+throughput. ``SweepRunner`` runs a list of scenarios, skipping every
+one whose content hash is already in the ``ResultCache`` and fanning
+the rest out over a process pool. Scenario seeds live inside the
+config (``workload.seed``), so results are bit-identical between
+serial and parallel execution and across re-runs.
+
+Post-processors extend a scenario with derived analyses that need the
+full ``SimResult`` (e.g. the Table 2 microgrid co-simulation); they are
+addressed by name so records stay JSON/cache-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sweep.cache import ResultCache
+from repro.sweep.grid import SCHEMA_VERSION, Scenario
+
+
+# --------------------------------------------------------------------------
+# post-processors: name -> fn(SimResult, scenario) -> extra metric columns
+# --------------------------------------------------------------------------
+
+def _post_microgrid_cosim(res, scenario: Scenario) -> Dict[str, float]:
+    """Table 2 pipeline: stage log -> 1-min power signal placed on a
+    diurnal window -> solar+battery microgrid co-sim (paper Table 1b)."""
+    from repro.core import MicrogridConfig, PowerModel, Signal, run_cosim
+    from repro.core.cosim import stages_to_load_signal
+    from repro.core.datasets import carbon_intensity_signal, solar_signal
+    from repro.core.microgrid import BatteryConfig
+
+    p = {"hours": 30.0, "start_hour": 8.0, "resolution_s": 60.0,
+         "solar_capacity_w": 600.0, "cloudiness": 0.12, "solar_seed": 3,
+         "ci_seed": 4, "battery_capacity_wh": 100.0, "soc_init": 0.5,
+         "soc_min": 0.2, "soc_max": 0.8}
+    p.update(scenario.post_params)
+
+    cfg = scenario.cfg
+    pm = PowerModel(cfg.device)
+    load = stages_to_load_signal(res.stages.start_s, res.stages.dur_s,
+                                 res.stages.mfu, pm,
+                                 n_devices=cfg.n_devices, pue=scenario.pue,
+                                 resolution_s=p["resolution_s"])
+    n_bins = int(p["hours"] * 3600.0 / p["resolution_s"])
+    idle_w = pm.dev.p_idle * cfg.n_devices * scenario.pue
+    vals = np.full(n_bins, idle_w)
+    start_bin = int(p["start_hour"] * 3600.0 / p["resolution_s"])
+    n_active = min(len(load.values), n_bins - start_bin)
+    vals[start_bin:start_bin + n_active] = load.values[:n_active]
+    times = np.arange(n_bins) * p["resolution_s"]
+    load_sig = Signal(times, vals, interp="previous")
+
+    solar = solar_signal(p["hours"], capacity_w=p["solar_capacity_w"],
+                         seed=p["solar_seed"], cloudiness=p["cloudiness"])
+    ci = carbon_intensity_signal(p["hours"], seed=p["ci_seed"])
+    grid_cfg = MicrogridConfig(battery=BatteryConfig(
+        capacity_wh=p["battery_capacity_wh"], soc_init=p["soc_init"],
+        soc_min=p["soc_min"], soc_max=p["soc_max"]))
+    out = run_cosim(load_sig, solar, ci, grid_cfg)
+    return {f"cosim_{k}": float(v) for k, v in out.metrics.items()}
+
+
+POSTPROCESSORS: Dict[str, Callable] = {
+    "microgrid_cosim": _post_microgrid_cosim,
+}
+
+
+# --------------------------------------------------------------------------
+# single-scenario execution
+# --------------------------------------------------------------------------
+
+def execute_scenario(scenario: Scenario) -> dict:
+    """Run one scenario to a flat, JSON-able record."""
+    from repro.core.carbon import emissions
+    from repro.core.power import DEVICES
+    from repro.sim import energy_report, run_simulation
+
+    t0 = time.perf_counter()
+    res = run_simulation(scenario.cfg)
+    rep = energy_report(res, pue=scenario.pue)
+    device = DEVICES[scenario.cfg.device]
+    carbon = emissions(rep.energy_wh, rep.gpu_hours, device,
+                       ci=scenario.grid_ci)
+    stages = res.stages
+    metrics = {
+        "energy_wh": rep.energy_wh,
+        "energy_kwh": rep.energy_wh / 1000.0,
+        "avg_power_w": rep.avg_power_w,
+        "peak_power_w": rep.peak_power_w,
+        "avg_mfu": res.avg_mfu(),
+        "duration_s": rep.duration_s,
+        "gpu_hours": rep.gpu_hours,
+        "throughput_qps": res.throughput_qps(),
+        "n_stages": len(stages.dur_s),
+        "avg_batch": float(np.mean(stages.batch_size))
+        if len(stages.batch_size) else 0.0,
+        "carbon_operational_g": carbon.operational_g,
+        "carbon_embodied_g": carbon.embodied_g,
+        "carbon_total_g": carbon.total_g,
+        "grid_ci_g_per_kwh": scenario.grid_ci,
+        **res.latency_stats(),
+    }
+    if scenario.post is not None:
+        if scenario.post not in POSTPROCESSORS:
+            raise KeyError(f"unknown post-processor {scenario.post!r}; "
+                           f"have {sorted(POSTPROCESSORS)}")
+        metrics.update(POSTPROCESSORS[scenario.post](res, scenario))
+    return {
+        "scenario": scenario.tag,
+        "key": scenario.key,
+        "params": dict(scenario.params),
+        "metrics": metrics,
+        "meta": {"schema": SCHEMA_VERSION,
+                 "elapsed_s": time.perf_counter() - t0,
+                 "model": scenario.cfg.model.name,
+                 "device": scenario.cfg.device,
+                 "n_devices": scenario.cfg.n_devices,
+                 "pue": scenario.pue,
+                 "post": scenario.post},
+    }
+
+
+# --------------------------------------------------------------------------
+# sweep runner
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepStats:
+    total: int = 0
+    executed: int = 0
+    cache_hits: int = 0
+    elapsed_s: float = 0.0
+    workers: int = 1
+
+    def summary(self) -> str:
+        return (f"{self.total} scenarios: {self.executed} executed, "
+                f"{self.cache_hits} cache hits, "
+                f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)")
+
+
+class SweepRunner:
+    """Execute scenarios with memoization and optional process fan-out.
+
+    ``workers > 1`` uses a spawn-context process pool (fork is unsafe
+    once jax has started its threadpools). ``cache=None`` disables
+    memoization entirely.
+    """
+
+    def __init__(self, cache: Optional[ResultCache] = None,
+                 workers: int = 1):
+        self.cache = cache
+        self.workers = max(1, int(workers))
+
+    @staticmethod
+    def _rebind(record: dict, sc: Scenario) -> dict:
+        """Content-addressing means a cached/shared record may come
+        from another scenario with an identical config — rebind the
+        tag/params to the requesting scenario (metrics are
+        config-determined, presentation is not)."""
+        record = dict(record)
+        record["scenario"] = sc.tag
+        record["params"] = dict(sc.params)
+        record["meta"] = {**record.get("meta", {}), "cache_hit": True}
+        return record
+
+    def run(self, scenarios: Sequence[Scenario],
+            progress: Optional[Callable[[str], None]] = None
+            ) -> Tuple[List[dict], SweepStats]:
+        t0 = time.perf_counter()
+        note = progress or (lambda msg: None)
+        records: List[Optional[dict]] = [None] * len(scenarios)
+        stats = SweepStats(total=len(scenarios), workers=self.workers)
+
+        misses: List[int] = []          # first index per uncached key
+        dup_of: Dict[str, List[int]] = {}   # key -> later same-key idxs
+        for i, sc in enumerate(scenarios):
+            hit = self.cache.get(sc.key) if self.cache is not None else None
+            if hit is not None:
+                records[i] = self._rebind(hit, sc)
+                stats.cache_hits += 1
+            elif sc.key in dup_of:      # same config earlier in this run
+                dup_of[sc.key].append(i)
+                stats.cache_hits += 1
+            else:
+                dup_of[sc.key] = []
+                misses.append(i)
+        if stats.cache_hits:
+            note(f"cache: {stats.cache_hits}/{len(scenarios)} hits")
+
+        if misses:
+            todo = [scenarios[i] for i in misses]
+            if self.workers > 1 and len(todo) > 1:
+                ctx = multiprocessing.get_context("spawn")
+                n = min(self.workers, len(todo))
+                note(f"executing {len(todo)} scenarios on {n} processes")
+                with ProcessPoolExecutor(max_workers=n,
+                                         mp_context=ctx) as pool:
+                    fresh = list(pool.map(execute_scenario, todo))
+            else:
+                note(f"executing {len(todo)} scenarios serially")
+                fresh = [execute_scenario(sc) for sc in todo]
+            for i, record in zip(misses, fresh):
+                record["meta"]["cache_hit"] = False
+                records[i] = record
+                stats.executed += 1
+                if self.cache is not None:
+                    self.cache.put(record["key"], record)
+                for j in dup_of[scenarios[i].key]:
+                    records[j] = self._rebind(record, scenarios[j])
+
+        stats.elapsed_s = time.perf_counter() - t0
+        return [r for r in records if r is not None], stats
+
+
+def run_scenarios(scenarios: Sequence[Scenario], workers: int = 1,
+                  cache: Optional[ResultCache] = None,
+                  progress: Optional[Callable[[str], None]] = None
+                  ) -> Tuple[List[dict], SweepStats]:
+    """One-call convenience wrapper around ``SweepRunner``."""
+    return SweepRunner(cache=cache, workers=workers).run(scenarios, progress)

@@ -1,0 +1,295 @@
+"""The paper's seven experiments as declarative sweep definitions.
+
+Each ``SweepDef`` is a thin grid declaration (base config + axes) plus
+a ``derive`` function that checks the paper's headline claims against
+the sweep records. ``--smoke`` variants shrink request counts and grid
+resolution so every figure's full pipeline runs in seconds — that is
+what CI exercises on every push.
+
+The benchmark scripts under ``benchmarks/`` are wrappers over this
+registry; ``python -m repro.sweep.cli`` drives it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.sim import INTEGRATION_DEFAULT, PAPER_DEFAULT
+from repro.sweep.grid import GridSpec
+from repro.sweep.report import flatten
+
+
+@dataclasses.dataclass
+class SweepDef:
+    name: str
+    title: str
+    build: Callable[..., List[Scenario]]   # build(smoke, n_requests=None)
+    derive: Callable[[List[dict]], str]    # records -> paper-claim summary
+    rows: Optional[Callable[[List[dict]], list]] = None  # default: flatten
+
+    def make_rows(self, records: List[dict]) -> list:
+        return (self.rows or flatten)(records)
+
+
+def _rows_by(records: List[dict], key: str) -> List[dict]:
+    return sorted(flatten(records), key=lambda r: r[key])
+
+
+# ---------------------------------------------------------------- fig1 ----
+
+def _fig1_build(smoke: bool, n_requests: Optional[int] = None):
+    qps = [1.0, 6.45, 10.0] if smoke else [0.5, 1.0, 2.0, 3.0, 5.0, 6.45,
+                                           7.9, 10.0, 12.6]
+    n = n_requests or (48 if smoke else 512)
+    return GridSpec(base=PAPER_DEFAULT, tag="fig1",
+                    axes={"workload.qps": qps},
+                    fixed={"workload.n_requests": n}).expand()
+
+
+def _fig1_derive(records: List[dict]) -> str:
+    rows = _rows_by(records, "qps")
+    sat = [r["avg_mfu"] for r in rows if 5.0 <= r["qps"] <= 7.9]
+    return (f"mfu@5-7.9qps={min(sat):.3f}-{max(sat):.3f}"
+            f";paper=saturates~0.45")
+
+
+# ---------------------------------------------------------------- fig2 ----
+
+_FIG2_MODELS = [("phi2-2.7b", 1, 1), ("llama3-8b", 1, 1),
+                ("codellama-34b", 1, 1), ("llama3-70b", 2, 2),
+                ("qwen-72b", 2, 2)]
+_FIG2_SMALL = {"phi2-2.7b", "llama3-8b", "codellama-34b"}
+
+
+def _fig2_build(smoke: bool, n_requests: Optional[int] = None):
+    models = _FIG2_MODELS[:2] if smoke else _FIG2_MODELS
+    counts = (48, 96) if smoke else (256, 1024, 4096)
+    if n_requests:
+        # distinct counts, never exceeding the requested cap, so the
+        # energy-vs-count fit stays well-posed
+        counts = sorted({max(1, n_requests // f) for f in (4, 2, 1)})
+    return GridSpec(base=PAPER_DEFAULT, tag="fig2",
+                    axes={"model+tp+pp": models,
+                          "workload.n_requests": list(counts)}).expand()
+
+
+def _fig2_extrapolations(records: List[dict]) -> Dict[str, dict]:
+    """Linear energy-in-request-count fit, extrapolated to 2^16."""
+    by_model: Dict[str, List[dict]] = {}
+    for r in flatten(records):
+        by_model.setdefault(r["model"], []).append(r)
+    extr = {}
+    for model, rs in by_model.items():
+        rs = sorted(rs, key=lambda r: r["n_requests"])
+        counts = [r["n_requests"] for r in rs]
+        energies = [r["energy_wh"] for r in rs]
+        if len(set(counts)) >= 2:
+            slope = float(np.polyfit(counts, energies, 1)[0])
+        else:
+            slope = energies[-1] / max(counts[-1], 1)
+        extr[model] = {"model": model, "n_requests": 65536,
+                       "energy_wh": slope * 65536, "extrapolated": True,
+                       "avg_power_w": float(np.mean(
+                           [r["avg_power_w"] for r in rs]))}
+    return extr
+
+
+def _fig2_rows(records: List[dict]) -> list:
+    return flatten(records) + list(_fig2_extrapolations(records).values())
+
+
+def _fig2_derive(records: List[dict]) -> str:
+    rows = flatten(records)
+    small = [r for r in rows if r["model"] in _FIG2_SMALL]
+    big = [r for r in rows if r["model"] not in _FIG2_SMALL]
+    extr = _fig2_extrapolations(records)
+    parts = []
+    if small:
+        parts.append(f"P_small={min(x['avg_power_w'] for x in small):.0f}-"
+                     f"{max(x['avg_power_w'] for x in small):.0f}W"
+                     f"(paper:135-155)")
+    if big:
+        parts.append(f"P_big={min(x['avg_power_w'] for x in big):.0f}-"
+                     f"{max(x['avg_power_w'] for x in big):.0f}W"
+                     f"(paper:125-127)")
+    if "codellama-34b" in extr:
+        parts.append(f"E64k_34b={extr['codellama-34b']['energy_wh']/1e3:.1f}"
+                     f"kWh(paper~16)")
+    if "llama3-70b" in extr:
+        parts.append(f"E64k_70b={extr['llama3-70b']['energy_wh']/1e3:.1f}"
+                     f"kWh(paper>80)")
+    return ";".join(parts)
+
+
+# ---------------------------------------------------------------- fig3 ----
+
+def _fig3_build(smoke: bool, n_requests: Optional[int] = None):
+    lengths = [128, 1024] if smoke else [128, 512, 1024, 4096]
+    pds = [20.0, 0.1] if smoke else [50.0, 10.0, 2.0, 1.0, 0.5, 0.1, 0.02]
+    n = n_requests or (32 if smoke else 256)
+    return GridSpec(
+        base=PAPER_DEFAULT, tag="fig3",
+        axes={"workload.min_len+workload.max_len": [(L, L) for L in lengths],
+              "workload.pd_ratio": pds},
+        fixed={"workload.n_requests": n}).expand()
+
+
+def _fig3_derive(records: List[dict]) -> str:
+    rows = flatten(records)
+    lengths = sorted({r["min_len"] for r in rows})
+    e_by_len = {L: sum(r["energy_wh"] for r in rows if r["min_len"] == L)
+                for L in lengths}
+    mono = all(e_by_len[lengths[i]] < e_by_len[lengths[i + 1]]
+               for i in range(len(lengths) - 1))
+    longest = [r for r in rows if r["min_len"] == lengths[-1]]
+    # pd_ratio axis runs prefill-heavy -> decode-heavy
+    decode_heavier = longest[-1]["energy_wh"] > longest[0]["energy_wh"]
+    return (f"energy_monotonic_in_length={mono}(paper:yes);"
+            f"decode_heavy_costs_more_at_{lengths[-1]}="
+            f"{decode_heavier}(paper:yes)")
+
+
+# ---------------------------------------------------------------- fig4 ----
+
+def _fig4_build(smoke: bool, n_requests: Optional[int] = None):
+    caps = [1, 8, 32] if smoke else [1, 2, 4, 8, 16, 32, 64, 128]
+    n = n_requests or (48 if smoke else 256)
+    return GridSpec(base=PAPER_DEFAULT, tag="fig4",
+                    axes={"scheduler.batch_cap": caps},
+                    fixed={"workload.qps": 50.0,
+                           "workload.n_requests": n}).expand()
+
+
+def _fig4_derive(records: List[dict]) -> str:
+    rows = _rows_by(records, "batch_cap")
+    sub = all(r["avg_batch"] <= r["batch_cap"] for r in rows)
+    power_up = rows[-1]["avg_power_w"] > rows[0]["avg_power_w"]
+    energy_down = rows[-1]["energy_wh"] < rows[0]["energy_wh"]
+    mid = min(rows, key=lambda r: abs(r["batch_cap"] - 16))
+    gain_lo = rows[0]["energy_wh"] / mid["energy_wh"]
+    gain_hi = mid["energy_wh"] / rows[-1]["energy_wh"]
+    return (f"batch_sublinear={sub};power_rises={power_up}(paper:yes);"
+            f"energy_drops={energy_down}(paper:yes);"
+            f"gain{rows[0]['batch_cap']}->{mid['batch_cap']}={gain_lo:.1f}x;"
+            f"gain{mid['batch_cap']}->{rows[-1]['batch_cap']}={gain_hi:.2f}x"
+            f"(paper:diminishing past 16)")
+
+
+# ---------------------------------------------------------------- fig5 ----
+
+def _fig5_build(smoke: bool, n_requests: Optional[int] = None):
+    qps = [1.0, 5.0, 10.0] if smoke else [0.5, 1.0, 2.0, 3.2, 5.0, 7.9,
+                                          10.0, 12.6]
+    n = n_requests or (64 if smoke else 2048)
+    return GridSpec(base=PAPER_DEFAULT, tag="fig5",
+                    axes={"workload.qps": qps,
+                          "workload.n_requests": [n]}).expand()
+
+
+def _fig5_derive(records: List[dict]) -> str:
+    rows = _rows_by(records, "qps")
+    n = rows[0]["n_requests"]
+    p_sat = [r["avg_power_w"] for r in rows if r["qps"] >= 5.0]
+    e_hi = [r["energy_wh"] for r in rows if r["qps"] >= 7.9] or \
+           [rows[-1]["energy_wh"]]
+    scale = n / 16384
+    return (f"P_sat={min(p_sat):.0f}-{max(p_sat):.0f}W(paper:~360);"
+            f"E_converged={min(e_hi):.1f}Wh"
+            f"(paper~{500 * scale:.0f}Wh at this workload scale)")
+
+
+# ---------------------------------------------------------------- exp5 ----
+
+def _exp5_build(smoke: bool, n_requests: Optional[int] = None):
+    grid = [(1, 1), (2, 1), (1, 2)] if smoke else \
+        [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (2, 4), (4, 1), (4, 2),
+         (4, 4)]
+    n = n_requests or (32 if smoke else 256)
+    return GridSpec(base=PAPER_DEFAULT, tag="exp5",
+                    axes={"tp+pp": grid},
+                    fixed={"model": "codellama-34b",
+                           "workload.qps": 3.0,
+                           "workload.n_requests": n}).expand()
+
+
+def _exp5_derive(records: List[dict]) -> str:
+    rows = flatten(records)
+    best = min(rows, key=lambda r: r["energy_wh"])
+    pmax = max(rows, key=lambda r: r["avg_power_w"])
+    return (f"P_range={min(r['avg_power_w'] for r in rows):.0f}-"
+            f"{max(r['avg_power_w'] for r in rows):.0f}W"
+            f"(paper:213-355);peak_at=TP{pmax['tp']}PP{pmax['pp']}"
+            f"(paper:TP2PP1);best=TP{best['tp']}PP{best['pp']}"
+            f"(paper:TP2PP1 or TP1PP2)")
+
+
+# --------------------------------------------------------------- table2 ---
+
+def _table2_build(smoke: bool, n_requests: Optional[int] = None):
+    """Paper deviation (documented in EXPERIMENTS.md §Repro): the stated
+    20 QPS on one A100 exceeds the device's peak FLOP/s by ~1.6x for
+    this workload; we reproduce the co-sim at 85% of OUR max QPS (5.5),
+    preserving the 5.5 h saturated-burst shape and total energy of the
+    paper's Table 2."""
+    n = n_requests or (1500 if smoke else 110_000)
+    return GridSpec(
+        base=INTEGRATION_DEFAULT, tag="table2",
+        axes={"workload.n_requests": [n]},
+        fixed={"workload.qps": 5.5},
+        post="microgrid_cosim",
+        post_params={"hours": 30.0}).expand()
+
+
+def _table2_derive(records: List[dict]) -> str:
+    m = records[0]["metrics"]
+    return (f"renewable_share={m['cosim_renewable_share_pct']:.1f}%"
+            f"(paper:70.3);offset={m['cosim_carbon_offset_pct']:.1f}%"
+            f"(paper:69.2);E={m['cosim_total_energy_kwh']:.2f}kWh"
+            f"(paper:5.90);"
+            f"net={m['cosim_net_emissions_kg'] * 1000:.0f}g(paper:759)")
+
+
+def _table2_rows(records: List[dict]) -> list:
+    return {k[len("cosim_"):]: v
+            for k, v in records[0]["metrics"].items()
+            if k.startswith("cosim_")}
+
+
+# ------------------------------------------------------------- registry ---
+
+SWEEPS: Dict[str, SweepDef] = {
+    "fig1": SweepDef("fig1", "QPS saturation (Llama-3-8B MFU plateau)",
+                     _fig1_build, _fig1_derive),
+    "fig2": SweepDef("fig2", "Request count vs power/energy across models",
+                     _fig2_build, _fig2_derive, rows=_fig2_rows),
+    "fig3": SweepDef("fig3", "Prefill:decode ratio x request length",
+                     _fig3_build, _fig3_derive),
+    "fig4": SweepDef("fig4", "Batch cap vs power and energy",
+                     _fig4_build, _fig4_derive),
+    "fig5": SweepDef("fig5", "QPS vs power and energy (fixed workload)",
+                     _fig5_build, _fig5_derive),
+    "exp5": SweepDef("exp5", "TP x PP parallelism (CodeLlama-34B)",
+                     _exp5_build, _exp5_derive),
+    "table2": SweepDef("table2", "Vidur-Vessim microgrid co-simulation",
+                       _table2_build, _table2_derive, rows=_table2_rows),
+}
+
+
+def run_sweep(name: str, smoke: bool = False,
+              n_requests: Optional[int] = None, workers: int = 1,
+              cache=None, progress=None):
+    """Expand + execute one named sweep.
+
+    Returns ``(records, stats, derived)``. ``cache`` follows
+    ``runner.SweepRunner`` semantics (None disables memoization).
+    """
+    from repro.sweep.runner import SweepRunner
+    if name not in SWEEPS:
+        raise KeyError(f"unknown sweep {name!r}; have {sorted(SWEEPS)}")
+    sweep = SWEEPS[name]
+    scenarios = sweep.build(smoke, n_requests=n_requests)
+    records, stats = SweepRunner(cache=cache, workers=workers).run(
+        scenarios, progress)
+    return records, stats, sweep.derive(records)

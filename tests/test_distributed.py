@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.analysis.hlo import collective_bytes, program_stats
 from repro.configs import ASSIGNED, get_config

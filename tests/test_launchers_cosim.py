@@ -5,7 +5,7 @@ import sys
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core import PowerModel, run_cosim, stages_to_load_signal
 from repro.core.datasets import carbon_intensity_signal, solar_signal

@@ -3,7 +3,7 @@ energy-conservation properties)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core.microgrid import BatteryConfig, MicrogridConfig, simulate, summarize
 from repro.core.policies import multi_region, solar_following, threshold_deferral

@@ -1,7 +1,7 @@
 """Paper-core unit + property tests: Eqs. 1-5."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core import (DEVICES, PowerModel, Signal, aggregate_power,
                         emissions, operational_energy, power, stage_mfu)

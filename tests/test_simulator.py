@@ -3,7 +3,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.configs.paper_models import LLAMA3_8B
 from repro.sim import (PAPER_DEFAULT, SchedulerConfig, SimConfig,
@@ -109,3 +109,50 @@ def test_zipf_lengths_skewed():
     lens = np.array([r.prefill_tokens + r.decode_tokens for r in reqs])
     assert np.median(lens) < np.mean(lens)  # right-skew
     assert lens.min() >= 100 and lens.max() <= 4000
+
+
+def _chunk_sim(chunk):
+    wl = WorkloadConfig(n_requests=4, qps=1.0, min_len=1024, max_len=1024,
+                        length_dist="fixed", seed=0)
+    sched = SchedulerConfig(batch_cap=8, chunk_prefill=chunk)
+    return run_simulation(SimConfig(model=LLAMA3_8B, workload=wl,
+                                    scheduler=sched))
+
+
+def test_chunked_prefill_stage_count():
+    """chunk_prefill=256 splits each 975-token prompt into 4 chunk
+    stages (Sarathi), vs one whole-prompt prefill stage unchunked."""
+    base = _chunk_sim(None)
+    chunked = _chunk_sim(256)
+    n_base = int(np.sum(base.stages.n_prefill_tokens > 0))
+    n_chunked = int(np.sum(chunked.stages.n_prefill_tokens > 0))
+    total_prefill = sum(r.prefill_tokens for r in chunked.requests)
+    assert n_base <= 4                       # one stage per prompt
+    assert n_chunked >= -(-total_prefill // 256)   # >= ceil(3900/256)=16
+    assert n_chunked > n_base
+    # every chunk stage respects the token budget
+    chunk_stages = chunked.stages.n_prefill_tokens
+    assert np.all(chunk_stages[chunk_stages > 0] <= 256)
+    # no prefill work is lost or duplicated
+    assert int(np.sum(base.stages.n_prefill_tokens)) == total_prefill
+    assert int(np.sum(chunked.stages.n_prefill_tokens)) == total_prefill
+    # the workload still completes, decode accounting intact
+    assert all(r.t_done >= 0 for r in chunked.requests)
+    assert int(np.sum(chunked.stages.n_decode_tokens)) == \
+        sum(r.decode_tokens for r in chunked.requests)
+
+
+def test_chunked_prefill_coalesces_decodes():
+    """Sarathi-style iterations mix prefill chunks with ongoing decodes
+    once earlier requests finish their prompts."""
+    res = _chunk_sim(256)
+    mixed = np.sum((res.stages.n_prefill_tokens > 0)
+                   & (res.stages.n_decode_tokens > 0))
+    assert mixed > 0
+
+
+def test_chunk_prefill_validation():
+    with pytest.raises(ValueError):
+        SchedulerConfig(chunk_prefill=0)
+    with pytest.raises(ValueError):
+        SchedulerConfig(chunk_prefill=-5)
