@@ -1,0 +1,22 @@
+"""Exp 6 (beyond-paper): multi-region fleet carbon-offset comparison.
+
+Sweeps a two-site fleet over device mix x router policy x CI trace
+pair through ``repro.fleet`` (requests geo-routed inside the simulation
+loop against each site's live CI signal). The headline derived check:
+on the divergent hydro-vs-coal pair, the carbon-greedy geo-router cuts
+fleet operational emissions versus round-robin — the request-level
+analogue of the paper's Section 5 multi-region policy discussion.
+
+Grid declaration: ``repro/sweep/scenarios.py`` ("fleet").
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_main, run_paper_sweep
+
+
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("fleet", smoke=smoke, n_requests=n_requests)
+
+
+if __name__ == "__main__":
+    bench_main("fleet")

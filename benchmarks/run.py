@@ -18,9 +18,10 @@ RESULTS = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 
 
 def main() -> None:
-    from benchmarks import (exp5_parallelism, fig1_qps_saturation,
-                            fig2_request_count, fig3_pd_ratio,
-                            fig4_batch_cap, fig5_qps, table2_cosim)
+    from benchmarks import (exp5_parallelism, exp6_fleet,
+                            fig1_qps_saturation, fig2_request_count,
+                            fig3_pd_ratio, fig4_batch_cap, fig5_qps,
+                            table2_cosim)
     benches = [
         ("fig1_qps_saturation", fig1_qps_saturation.run),
         ("fig2_request_count", fig2_request_count.run),
@@ -29,6 +30,7 @@ def main() -> None:
         ("fig5_qps", fig5_qps.run),
         ("exp5_parallelism", exp5_parallelism.run),
         ("table2_cosim", table2_cosim.run),
+        ("exp6_fleet", exp6_fleet.run),
     ]
     args = sys.argv[1:]
     smoke = "--smoke" in args
@@ -43,7 +45,7 @@ def main() -> None:
                    if any(n.startswith(want) for want in names)]
         if not benches:
             print(f"no benchmark matches {names!r}; have "
-                  f"fig1..fig5, exp5, table2", file=sys.stderr)
+                  f"fig1..fig5, exp5, exp6, table2", file=sys.stderr)
             sys.exit(2)
     # smoke-scale rows go to their own subdir so they never shadow a
     # full reproduction's results under the same path

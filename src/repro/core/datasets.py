@@ -35,6 +35,27 @@ def solar_signal(hours: float, capacity_w: float = 600.0, seed: int = 0,
     return Signal(t, capacity_w * clear * cloud_factor, interp="linear")
 
 
+# Named grid regions for fleet/sweep axes: parameterizations of the
+# synthetic duck-curve generator below (gCO2/kWh; seeds fixed so every
+# sweep samples identical traces). "caiso-east" is the same grid shape
+# three timezones ahead, so its evening ramp lands 3 h earlier in
+# absolute sim time — a cheap timezone-diversity stand-in.
+CI_TRACES = {
+    "caiso": dict(base=380.0, swing=120.0, seed=4),
+    "caiso-east": dict(base=380.0, swing=120.0, seed=4, day_offset_h=3.0),
+    "coal": dict(base=720.0, swing=60.0, seed=11),
+    "hydro": dict(base=70.0, swing=20.0, seed=12),
+    "wind": dict(base=180.0, swing=90.0, seed=13),
+}
+
+
+def ci_trace_signal(name: str, hours: float, step_s: float = 60.0) -> Signal:
+    """Carbon-intensity trace for a named region (see ``CI_TRACES``)."""
+    if name not in CI_TRACES:
+        raise KeyError(f"unknown CI trace {name!r}; have {sorted(CI_TRACES)}")
+    return carbon_intensity_signal(hours, step_s=step_s, **CI_TRACES[name])
+
+
 def carbon_intensity_signal(hours: float, seed: int = 1,
                             step_s: float = 60.0,
                             base: float = 380.0, swing: float = 120.0,

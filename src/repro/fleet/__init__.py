@@ -1,0 +1,21 @@
+"""Multi-site heterogeneous fleet simulation with carbon-aware
+geo-routing: site/fleet configuration, pluggable routers, and the
+``run_fleet_simulation`` driver that rolls per-site continuous-batching
+simulations into a fleet-level energy/carbon/latency report.
+"""
+from repro.fleet.config import FleetConfig, SiteConfig
+from repro.fleet.routing import (ROUTERS, CarbonGreedyFleetRouter,
+                                 FleetRouter, LeastLoadedFleetRouter,
+                                 RoundRobinFleetRouter, RoundRobinRouter,
+                                 make_router)
+from repro.fleet.simulation import (FleetResult, LoopSite, SiteResult,
+                                    drive, run_fleet_simulation)
+
+__all__ = [
+    "FleetConfig", "SiteConfig",
+    "ROUTERS", "CarbonGreedyFleetRouter", "FleetRouter",
+    "LeastLoadedFleetRouter", "RoundRobinFleetRouter", "RoundRobinRouter",
+    "make_router",
+    "FleetResult", "LoopSite", "SiteResult", "drive",
+    "run_fleet_simulation",
+]

@@ -1,0 +1,82 @@
+"""Multi-site fleet deployment description.
+
+A fleet serves one workload from several *sites*: each site is a
+continuous-batching deployment (device type, replica count, TP/PP) in
+its own grid region, with a named carbon-intensity trace
+(``repro.core.datasets.CI_TRACES``) and an optional microgrid (solar
+capacity + battery sizing, the paper's Table 1b actors). Requests are
+assigned to sites by a pluggable router (``repro.fleet.routing``)
+inside the simulation loop, so carbon-aware placement decisions see
+each site's live CI signal — not a post-hoc load transform.
+
+Everything here is plain dataclasses over primitives, so a
+``FleetConfig`` content-hashes into the sweep cache exactly like a
+``SimConfig`` (``repro.sweep.grid.config_digest``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.sim.execmodel import ExecModelConfig
+from repro.sim.requests import WorkloadConfig
+from repro.sim.scheduler import SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteConfig:
+    """One datacenter site of the fleet."""
+    name: str
+    device: str = "a100"              # repro.core.power.DEVICES key
+    n_replicas: int = 1
+    tp: int = 1
+    pp: int = 1
+    ci_trace: str = "caiso"           # repro.core.datasets.CI_TRACES key
+    # microgrid actors (paper Table 1b); zero capacity disables each
+    solar_capacity_w: float = 0.0
+    cloudiness: float = 0.12
+    solar_seed: int = 3
+    battery_capacity_wh: float = 0.0
+    soc_init: float = 0.5
+    soc_min: float = 0.2
+    soc_max: float = 0.8
+    scheduler: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig)
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_replicas * self.tp * self.pp    # Eq. 2, per site
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """The whole deployment: sites + shared workload + router policy."""
+    model: ModelConfig
+    sites: Tuple[SiteConfig, ...]
+    workload: WorkloadConfig = dataclasses.field(
+        default_factory=WorkloadConfig)
+    router: str = "round_robin"       # repro.fleet.routing.ROUTERS key
+    router_params: Dict[str, float] = dataclasses.field(default_factory=dict)
+    execmodel: ExecModelConfig = dataclasses.field(
+        default_factory=ExecModelConfig)
+    auto_kv_budget: bool = True
+    pue: float = 1.2
+    resolution_s: float = 60.0        # Eq. 5 bin width for site profiles
+
+    def __post_init__(self):
+        self.sites = tuple(self.sites)
+        if not self.sites:
+            raise ValueError("a fleet needs at least one site")
+        names = [s.name for s in self.sites]
+        if len(set(names)) != len(names):
+            raise ValueError(f"site names must be unique, got {names}")
+
+    @property
+    def n_devices(self) -> int:
+        return sum(s.n_devices for s in self.sites)
+
+    @property
+    def device(self) -> str:
+        """Joined device mix, for report metadata."""
+        return "+".join(dict.fromkeys(s.device for s in self.sites))

@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(~0.5.x); the pinned toolchain (0.4.x) only has the old name. Kernels
+import the class from here so one build runs on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -67,6 +67,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+    # jax <= 0.4.x wraps the cost dict in a one-element list
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo, default_trip=cfg.n_layers)
     stats = program_stats(hlo, default_trip=cfg.n_layers)

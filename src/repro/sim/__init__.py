@@ -1,6 +1,6 @@
 from repro.sim.execmodel import ExecModelConfig, ExecutionModel, StageCost
 from repro.sim.requests import Request, WorkloadConfig, generate
-from repro.sim.scheduler import ReplicaScheduler, RoundRobinRouter, SchedulerConfig
+from repro.sim.scheduler import ReplicaScheduler, SchedulerConfig
 from repro.sim.simulator import (SimConfig, SimResult, StageLog, energy_report,
                                  run_simulation)
 from repro.sim.defaults import INTEGRATION_DEFAULT, PAPER_DEFAULT, PAPER_PUE
@@ -12,3 +12,12 @@ __all__ = [
     "SimConfig", "SimResult", "StageLog", "energy_report", "run_simulation",
     "INTEGRATION_DEFAULT", "PAPER_DEFAULT", "PAPER_PUE",
 ]
+
+
+def __getattr__(name):
+    # moved to the routing layer; lazy so repro.sim <-> repro.fleet
+    # imports never cycle at module load
+    if name == "RoundRobinRouter":
+        from repro.fleet.routing import RoundRobinRouter
+        return RoundRobinRouter
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,4 +1,4 @@
-"""vLLM-style continuous-batching scheduler + round-robin replica router.
+"""vLLM-style continuous-batching scheduler.
 
 Each replica runs iterations ("batch stages"):
   - waiting prompts are admitted FCFS while the running set < batch_cap
@@ -133,11 +133,11 @@ class ReplicaScheduler:
         return done
 
 
-class RoundRobinRouter:
-    def __init__(self, n_replicas: int, cfg: SchedulerConfig):
-        self.replicas = [ReplicaScheduler(cfg) for _ in range(n_replicas)]
-        self._next = 0
-
-    def route(self, req: Request):
-        self.replicas[self._next].add(req)
-        self._next = (self._next + 1) % len(self.replicas)
+def __getattr__(name):
+    # RoundRobinRouter moved to the routing layer (repro.fleet.routing);
+    # resolved lazily here to keep the historical import path working
+    # without a circular import at module load.
+    if name == "RoundRobinRouter":
+        from repro.fleet.routing import RoundRobinRouter
+        return RoundRobinRouter
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,7 +16,7 @@ from repro.configs.base import ModelConfig
 from repro.core.power import DeviceProfile, PowerModel, DEVICES
 from repro.sim.execmodel import ExecModelConfig, ExecutionModel
 from repro.sim.requests import Request, WorkloadConfig, generate
-from repro.sim.scheduler import RoundRobinRouter, SchedulerConfig
+from repro.sim.scheduler import SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -51,6 +51,21 @@ def kv_budget_tokens(model: ModelConfig, device: DeviceProfile, tp: int,
     return int(room / kv_per_gpu)
 
 
+def latency_stats(requests) -> Dict[str, float]:
+    """TTFT / end-to-end percentiles over served requests (-1 when a
+    percentile has no samples). Shared by single-site and fleet
+    reports."""
+    ttft = [r.t_first_token - r.arrival_s for r in requests
+            if r.t_first_token >= 0]
+    e2e = [r.t_done - r.arrival_s for r in requests if r.t_done >= 0]
+    return {
+        "ttft_p50_s": float(np.median(ttft)) if ttft else -1.0,
+        "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else -1.0,
+        "e2e_p50_s": float(np.median(e2e)) if e2e else -1.0,
+        "e2e_p99_s": float(np.percentile(e2e, 99)) if e2e else -1.0,
+    }
+
+
 @dataclasses.dataclass
 class SimConfig:
     model: ModelConfig
@@ -82,15 +97,7 @@ class SimResult:
         return len(done) / max(self.stages.total_duration(), 1e-9)
 
     def latency_stats(self) -> Dict[str, float]:
-        ttft = [r.t_first_token - r.arrival_s for r in self.requests
-                if r.t_first_token >= 0]
-        e2e = [r.t_done - r.arrival_s for r in self.requests if r.t_done >= 0]
-        return {
-            "ttft_p50_s": float(np.median(ttft)) if ttft else -1.0,
-            "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else -1.0,
-            "e2e_p50_s": float(np.median(e2e)) if e2e else -1.0,
-            "e2e_p99_s": float(np.percentile(e2e, 99)) if e2e else -1.0,
-        }
+        return latency_stats(self.requests)
 
     def avg_mfu(self) -> float:
         if len(self.stages.dur_s) == 0:
@@ -99,92 +106,38 @@ class SimResult:
                      / max(self.stages.dur_s.sum(), 1e-12))
 
 
-def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0) -> SimResult:
+def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0,
+                   router=None) -> SimResult:
+    """Single-site simulation — the trivial fleet.
+
+    The event loop lives in ``repro.fleet.simulation.drive``; this
+    drives one ``LoopSite`` over it. ``router`` injects a pre-built
+    replica router (anything exposing ``route(req) -> replica index``
+    and a ``replicas`` list of ``ReplicaScheduler``); when injected,
+    the caller owns scheduler config resolution (``auto_kv_budget`` is
+    not applied). Default: round-robin over ``cfg.n_replicas`` fresh
+    replicas, the historical behavior.
+    """
+    from repro.fleet.simulation import LoopSite, drive
+
     requests = generate(cfg.workload)
     device = DEVICES[cfg.device]
-    sched_cfg = cfg.scheduler
-    if cfg.auto_kv_budget:
-        budget = kv_budget_tokens(cfg.model, device, cfg.tp, cfg.pp)
-        if budget <= 0:
-            raise ValueError(
-                f"{cfg.model.name} does not fit {cfg.device} at "
-                f"TP={cfg.tp} PP={cfg.pp}")
-        import dataclasses as _dc
-        sched_cfg = _dc.replace(sched_cfg, kv_budget_tokens=budget)
-    router = RoundRobinRouter(cfg.n_replicas, sched_cfg)
-    exec_model = ExecutionModel(cfg.model, device, cfg.tp, cfg.pp,
-                                cfg.execmodel)
-
-    logs = {k: [] for k in ("start", "dur", "fm", "fa", "mfu", "npt", "ndt",
-                            "rep", "bs")}
-    pending = sorted(requests, key=lambda r: r.arrival_s)
-    pi = 0
-    clocks = [0.0] * cfg.n_replicas
-
-    while True:
-        # route every request that has arrived before the earliest clock
-        tmin = min(clocks)
-        while pi < len(pending) and pending[pi].arrival_s <= tmin:
-            router.route(pending[pi])
-            pi += 1
-
-        # pick the replica with work and the earliest clock
-        candidates = [i for i in range(cfg.n_replicas)
-                      if router.replicas[i].has_work()]
-        if not candidates:
-            if pi >= len(pending):
-                break
-            # idle until next arrival
-            t_next = pending[pi].arrival_s
-            for i in range(cfg.n_replicas):
-                clocks[i] = max(clocks[i], t_next)
-            continue
-        i = min(candidates, key=lambda j: clocks[j])
-        rep = router.replicas[i]
-        now = clocks[i]
-
-        prefills, decodes = rep.next_batch()
-        if not prefills and not decodes:
-            # running is empty and waiting blocked: jump to next arrival
-            if pi < len(pending):
-                clocks[i] = max(now, pending[pi].arrival_s)
-                continue
-            break
-
-        # chunked prefill (Sarathi) yields mixed iterations: the chunk
-        # token counts come from the scheduler, and decodes of already-
-        # prefilled sequences ride along in the same stage
-        plens = list(rep.last_prefill_tokens)
-        ctxs = [r.prefill_tokens + r.decoded for r in decodes]
-        cost = exec_model.stage_cost(plens, ctxs)
-        npt, ndt = sum(plens), len(decodes)
-
-        # one record per pipeline stage (replica-stage granularity)
-        for ps in range(cfg.pp):
-            logs["start"].append(now + ps * cost.t_total / max(cfg.pp, 1))
-            logs["dur"].append(cost.t_total)
-            logs["fm"].append(cost.flops_mlp)
-            logs["fa"].append(cost.flops_attn)
-            logs["mfu"].append(cost.mfu)
-            logs["npt"].append(npt)
-            logs["ndt"].append(ndt)
-            logs["rep"].append(i * cfg.pp + ps)
-            logs["bs"].append(len(prefills) + len(decodes))
-
-        now += cost.t_total
-        clocks[i] = now
-        rep.complete_iteration(prefills, decodes, now)
-        if now > max_sim_s:
-            break
-
-    stages = StageLog(
-        start_s=np.array(logs["start"]), dur_s=np.array(logs["dur"]),
-        flops_mlp=np.array(logs["fm"]), flops_attn=np.array(logs["fa"]),
-        mfu=np.array(logs["mfu"]),
-        n_prefill_tokens=np.array(logs["npt"]),
-        n_decode_tokens=np.array(logs["ndt"]),
-        replica=np.array(logs["rep"]), batch_size=np.array(logs["bs"]))
-    return SimResult(stages=stages, requests=requests, cfg=cfg)
+    if router is None:
+        from repro.fleet.routing import RoundRobinRouter
+        sched_cfg = cfg.scheduler
+        if cfg.auto_kv_budget:
+            budget = kv_budget_tokens(cfg.model, device, cfg.tp, cfg.pp)
+            if budget <= 0:
+                raise ValueError(
+                    f"{cfg.model.name} does not fit {cfg.device} at "
+                    f"TP={cfg.tp} PP={cfg.pp}")
+            import dataclasses as _dc
+            sched_cfg = _dc.replace(sched_cfg, kv_budget_tokens=budget)
+        router = RoundRobinRouter(cfg.n_replicas, sched_cfg)
+    site = LoopSite(router, ExecutionModel(cfg.model, device, cfg.tp,
+                                           cfg.pp, cfg.execmodel), cfg.pp)
+    drive([site], site.add, requests, max_sim_s)
+    return SimResult(stages=site.stage_log(), requests=requests, cfg=cfg)
 
 
 def energy_report(res: SimResult, pue: float = 1.2):

@@ -13,6 +13,11 @@ Joint axes sweep several fields in lockstep with a ``+``-joined key:
                    "tp+pp": [(1, 1), (2, 2)]})
 
 expands to 6 scenarios (cardinality = product of axis lengths).
+
+Axes (or ``fixed`` entries) whose path starts with ``post.`` override
+the scenario's post-processor parameters instead of the config — e.g.
+``"post.solar_capacity_w": [0.0, 600.0]`` sweeps the microgrid co-sim's
+solar actor without touching ``SimConfig`` (the carbon-aware axes).
 """
 from __future__ import annotations
 
@@ -27,7 +32,10 @@ from repro.sim.simulator import SimConfig
 
 # Bump when simulator/runner semantics change in a way that invalidates
 # previously cached scenario results.
-SCHEMA_VERSION = 1
+# v2: shared fleet/single-site event loop — admission is gated on the
+# next processing event instead of the min clock across all replicas
+# (single-replica results are unchanged; multi-replica skew differs).
+SCHEMA_VERSION = 2
 
 # Default static grid carbon intensity for the report's carbon columns
 # (gCO2eq/kWh; CAISO-ish annual average — the paper's co-sim case study
@@ -101,8 +109,13 @@ def derive_seed(params: Mapping[str, object]) -> int:
 
 @dataclasses.dataclass
 class Scenario:
-    """One fully-resolved point of a sweep."""
-    cfg: SimConfig
+    """One fully-resolved point of a sweep.
+
+    ``cfg`` is a ``SimConfig`` or a ``repro.fleet.FleetConfig`` — the
+    runner dispatches on the type; both digest identically through
+    ``config_digest``.
+    """
+    cfg: object
     params: Dict[str, object]
     tag: str = "scenario"
     pue: float = 1.2
@@ -158,10 +171,19 @@ class GridSpec:
                     params[part.split(".")[-1]] = _jsonable(v)
             if self.seed_per_scenario and "workload.seed" not in overrides:
                 overrides["workload.seed"] = derive_seed(params)
-            cfg = with_overrides(self.base, overrides)
+            # "post.<key>" paths parameterize the post-processor, the
+            # rest resolve into the config tree
+            post_params = dict(self.post_params)
+            cfg_overrides = {}
+            for path, value in overrides.items():
+                if path.startswith("post."):
+                    post_params[path[len("post."):]] = value
+                else:
+                    cfg_overrides[path] = value
+            cfg = with_overrides(self.base, cfg_overrides)
             label = ",".join(f"{k}={params[k]}" for k in params) or "base"
             scenarios.append(Scenario(
                 cfg=cfg, params=params, tag=f"{self.tag}/{label}",
                 pue=self.pue, grid_ci=self.grid_ci, post=self.post,
-                post_params=dict(self.post_params)))
+                post_params=post_params))
         return scenarios

@@ -35,13 +35,14 @@ def _post_microgrid_cosim(res, scenario: Scenario) -> Dict[str, float]:
     diurnal window -> solar+battery microgrid co-sim (paper Table 1b)."""
     from repro.core import MicrogridConfig, PowerModel, Signal, run_cosim
     from repro.core.cosim import stages_to_load_signal
-    from repro.core.datasets import carbon_intensity_signal, solar_signal
+    from repro.core.datasets import (carbon_intensity_signal,
+                                     ci_trace_signal, solar_signal)
     from repro.core.microgrid import BatteryConfig
 
     p = {"hours": 30.0, "start_hour": 8.0, "resolution_s": 60.0,
          "solar_capacity_w": 600.0, "cloudiness": 0.12, "solar_seed": 3,
-         "ci_seed": 4, "battery_capacity_wh": 100.0, "soc_init": 0.5,
-         "soc_min": 0.2, "soc_max": 0.8}
+         "ci_seed": 4, "ci_trace": None, "battery_capacity_wh": 100.0,
+         "soc_init": 0.5, "soc_min": 0.2, "soc_max": 0.8}
     p.update(scenario.post_params)
 
     cfg = scenario.cfg
@@ -61,7 +62,10 @@ def _post_microgrid_cosim(res, scenario: Scenario) -> Dict[str, float]:
 
     solar = solar_signal(p["hours"], capacity_w=p["solar_capacity_w"],
                          seed=p["solar_seed"], cloudiness=p["cloudiness"])
-    ci = carbon_intensity_signal(p["hours"], seed=p["ci_seed"])
+    if p["ci_trace"]:       # named region (core.datasets.CI_TRACES)
+        ci = ci_trace_signal(p["ci_trace"], p["hours"])
+    else:
+        ci = carbon_intensity_signal(p["hours"], seed=p["ci_seed"])
     grid_cfg = MicrogridConfig(battery=BatteryConfig(
         capacity_wh=p["battery_capacity_wh"], soc_init=p["soc_init"],
         soc_min=p["soc_min"], soc_max=p["soc_max"]))
@@ -78,11 +82,43 @@ POSTPROCESSORS: Dict[str, Callable] = {
 # single-scenario execution
 # --------------------------------------------------------------------------
 
+def _execute_fleet_scenario(scenario: Scenario) -> dict:
+    """Fleet scenarios: run the multi-site simulation and report its
+    per-site + fleet-total energy/carbon columns."""
+    from repro.fleet import run_fleet_simulation
+
+    if scenario.post is not None:
+        raise ValueError(
+            "fleet scenarios run their own per-site microgrid co-sim; "
+            f"post-processor {scenario.post!r} is not supported")
+    t0 = time.perf_counter()
+    res = run_fleet_simulation(scenario.cfg)
+    cfg = scenario.cfg
+    return {
+        "scenario": scenario.tag,
+        "key": scenario.key,
+        "params": dict(scenario.params),
+        "metrics": res.summary(),
+        "meta": {"schema": SCHEMA_VERSION,
+                 "elapsed_s": time.perf_counter() - t0,
+                 "model": cfg.model.name,
+                 "device": cfg.device,
+                 "n_devices": cfg.n_devices,
+                 "pue": cfg.pue,
+                 "post": None,
+                 "router": cfg.router},
+    }
+
+
 def execute_scenario(scenario: Scenario) -> dict:
     """Run one scenario to a flat, JSON-able record."""
     from repro.core.carbon import emissions
     from repro.core.power import DEVICES
+    from repro.fleet.config import FleetConfig
     from repro.sim import energy_report, run_simulation
+
+    if isinstance(scenario.cfg, FleetConfig):
+        return _execute_fleet_scenario(scenario)
 
     t0 = time.perf_counter()
     res = run_simulation(scenario.cfg)

@@ -17,7 +17,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.sim import INTEGRATION_DEFAULT, PAPER_DEFAULT
-from repro.sweep.grid import GridSpec
+from repro.sweep.grid import GridSpec, Scenario
 from repro.sweep.report import flatten
 
 
@@ -257,6 +257,108 @@ def _table2_rows(records: List[dict]) -> list:
             if k.startswith("cosim_")}
 
 
+# --------------------------------------------------------------- carbon ---
+
+def _carbon_build(smoke: bool, n_requests: Optional[int] = None):
+    """ROADMAP "carbon-aware sweep scenarios": grid CI trace, solar
+    capacity and battery sizing as post-processor axes over the
+    single-site microgrid co-sim (same Eq. 5 -> co-sim pipeline as
+    table2, swept instead of fixed at the paper's Table 1b point)."""
+    n = n_requests or (400 if smoke else 20_000)
+    traces = ["hydro", "caiso"] if smoke else ["hydro", "wind", "caiso",
+                                               "coal"]
+    solar = [0.0, 600.0] if smoke else [0.0, 300.0, 600.0, 1200.0]
+    batt = [100.0] if smoke else [0.0, 100.0, 400.0]
+    return GridSpec(
+        base=PAPER_DEFAULT, tag="carbon",
+        axes={"post.ci_trace": traces,
+              "post.solar_capacity_w": solar,
+              "post.battery_capacity_wh": batt},
+        fixed={"workload.n_requests": n, "workload.qps": 5.0},
+        post="microgrid_cosim",
+        # full diurnal window: the load lands at start_hour=8 inside
+        # the solar day, so the solar/battery axes actually bite
+        post_params={"hours": 24.0}).expand()
+
+
+def _carbon_derive(records: List[dict]) -> str:
+    rows = flatten(records)
+    by_trace: Dict[str, List[float]] = {}
+    for r in rows:
+        by_trace.setdefault(r["ci_trace"], []).append(
+            r["cosim_net_emissions_kg"])
+    order = sorted(by_trace, key=lambda t: float(np.mean(by_trace[t])))
+    solar_off = [r["cosim_net_emissions_kg"] for r in rows
+                 if r["solar_capacity_w"] == 0.0]
+    solar_on = [r["cosim_net_emissions_kg"] for r in rows
+                if r["solar_capacity_w"] > 0.0]
+    helps = float(np.mean(solar_on)) < float(np.mean(solar_off))
+    return (f"ci_ranking={'<'.join(order)};"
+            f"solar_cuts_net_emissions={helps}(expected:True)")
+
+
+# ---------------------------------------------------------------- fleet ---
+
+_FLEET_DIVERGENT = "hydro+coal"     # the two-region divergent-CI pair
+
+
+def _fleet_build(smoke: bool, n_requests: Optional[int] = None):
+    """Multi-site fleet: site device mix x router policy x two-region
+    CI trace pair, each scenario a full in-loop-routed fleet
+    simulation (repro.fleet)."""
+    from repro.configs.paper_models import LLAMA3_8B
+    from repro.fleet.config import FleetConfig, SiteConfig
+    from repro.sim.requests import WorkloadConfig
+    from repro.sim.scheduler import SchedulerConfig
+
+    n = n_requests or (64 if smoke else 2048)
+    routers = (["round_robin", "carbon_greedy"] if smoke
+               else ["round_robin", "least_loaded", "carbon_greedy"])
+    ci_pairs = ([("hydro", "coal"), ("caiso", "caiso-east")] if smoke
+                else [("hydro", "coal"), ("caiso", "caiso-east"),
+                      ("wind", "coal")])
+    mixes = [("a100", "a100")] if smoke else [("a100", "a100"),
+                                              ("a100", "h100")]
+    wl = WorkloadConfig(n_requests=n, qps=6.45, min_len=128,
+                        max_len=1024 if smoke else 4096, seed=0)
+    scenarios = []
+    for mix in mixes:
+        for pair in ci_pairs:
+            for router in routers:
+                sites = tuple(
+                    SiteConfig(name=f"s{i}-{trace}", device=dev,
+                               ci_trace=trace,
+                               scheduler=SchedulerConfig(batch_cap=64))
+                    for i, (dev, trace) in enumerate(zip(mix, pair)))
+                cfg = FleetConfig(model=LLAMA3_8B, sites=sites,
+                                  workload=wl, router=router)
+                params = {"devices": "+".join(mix),
+                          "ci": "+".join(pair), "router": router}
+                label = ",".join(f"{k}={v}" for k, v in params.items())
+                scenarios.append(Scenario(cfg=cfg, params=params,
+                                          tag=f"fleet/{label}",
+                                          pue=cfg.pue))
+    return scenarios
+
+
+def _fleet_derive(records: List[dict]) -> str:
+    """Headline check: on the divergent two-region pair the
+    carbon-greedy geo-router must emit less than round-robin."""
+    rows = [r for r in flatten(records) if r["ci"] == _FLEET_DIVERGENT
+            and r["devices"] == "a100+a100"]
+    by_router = {r["router"]: r for r in rows}
+    rr = by_router.get("round_robin")
+    cg = by_router.get("carbon_greedy")
+    if not (rr and cg):
+        return "divergent-pair rows missing"
+    save = 100.0 * (1.0 - cg["carbon_operational_g"]
+                    / max(rr["carbon_operational_g"], 1e-12))
+    return (f"carbon_greedy_vs_round_robin_on_{_FLEET_DIVERGENT}="
+            f"-{save:.1f}%_emissions(expected:negative);"
+            f"rr={rr['carbon_operational_g']:.2f}g,"
+            f"cg={cg['carbon_operational_g']:.2f}g")
+
+
 # ------------------------------------------------------------- registry ---
 
 SWEEPS: Dict[str, SweepDef] = {
@@ -274,6 +376,11 @@ SWEEPS: Dict[str, SweepDef] = {
                      _exp5_build, _exp5_derive),
     "table2": SweepDef("table2", "Vidur-Vessim microgrid co-simulation",
                        _table2_build, _table2_derive, rows=_table2_rows),
+    "carbon": SweepDef("carbon", "CI trace x solar x battery co-sim axes",
+                       _carbon_build, _carbon_derive),
+    "fleet": SweepDef("fleet",
+                      "Multi-site fleet: device mix x router x CI pair",
+                      _fleet_build, _fleet_derive),
 }
 
 

@@ -111,9 +111,14 @@ PIPELINE_SCRIPT = textwrap.dedent("""
 
 
 def test_pipeline_matches_sequential():
-    r = subprocess.run([sys.executable, "-c", PIPELINE_SCRIPT],
-                       capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    import os
+    r = subprocess.run(
+        [sys.executable, "-c", PIPELINE_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        # pin the platform: an unset JAX_PLATFORMS makes jax probe for
+        # TPU/GPU runtimes in the stripped env and hang on some images
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
     assert "PIPELINE_OK" in r.stdout, r.stderr[-2000:]
 
 

@@ -1,0 +1,300 @@
+"""Fleet subsystem: routing policies, request conservation, energy
+roll-up identities, carbon-greedy-vs-round-robin ordering, and the
+sweep-engine integration (fleet scenarios + post.* carbon axes)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LLAMA3_8B
+from repro.core.energy import operational_energy
+from repro.core.power import PowerModel
+from repro.fleet import (FleetConfig, SiteConfig, make_router,
+                         run_fleet_simulation)
+from repro.fleet.routing import RoundRobinRouter
+from repro.sim import (SchedulerConfig, SimConfig, WorkloadConfig,
+                       energy_report, run_simulation)
+from repro.sim.simulator import kv_budget_tokens
+from repro.core.power import DEVICES
+
+
+def small_workload(n=48, qps=5.0, seed=0):
+    return WorkloadConfig(n_requests=n, qps=qps, min_len=64, max_len=512,
+                          seed=seed)
+
+
+def two_region_fleet(router="round_robin", n=48, devices=("a100", "a100"),
+                     traces=("hydro", "coal"), **fleet_kw):
+    sites = tuple(SiteConfig(name=f"s{i}-{t}", device=d, ci_trace=t,
+                             scheduler=SchedulerConfig(batch_cap=16))
+                  for i, (d, t) in enumerate(zip(devices, traces)))
+    return FleetConfig(model=LLAMA3_8B, sites=sites,
+                       workload=small_workload(n), router=router,
+                       **fleet_kw)
+
+
+# ---------------------------------------------------------------------------
+# routers (unit)
+# ---------------------------------------------------------------------------
+
+class _View:
+    """Minimal site-view stub implementing the router protocol."""
+
+    def __init__(self, tokens=0, ci=100.0):
+        self.tokens = tokens
+        self.ci = ci
+
+    def outstanding_tokens(self):
+        return self.tokens
+
+    def outstanding_requests(self):
+        return self.tokens // 100
+
+    def ci_at(self, t):
+        return self.ci
+
+
+def test_round_robin_router_cycles():
+    r = make_router("round_robin", 3)
+    views = [_View() for _ in range(3)]
+    assert [r.choose(None, 0.0, views) for _ in range(6)] == \
+        [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_router_joins_shortest_queue():
+    r = make_router("least_loaded", 3)
+    views = [_View(tokens=500), _View(tokens=20), _View(tokens=300)]
+    assert r.choose(None, 0.0, views) == 1
+    views[1].tokens = 900
+    assert r.choose(None, 0.0, views) == 2
+
+
+def test_carbon_greedy_migration_penalty_semantics():
+    r = make_router("carbon_greedy", 2, migration_penalty_g=5.0,
+                    request_kwh_est=2e-4, expected_dwell_requests=256.0)
+    views = [_View(ci=500.0), _View(ci=100.0)]
+    assert r.choose(None, 0.0, views) == 1      # initial pick: min CI
+    # small gap does not amortize the penalty: stay at the current site
+    views[0].ci = 90.0
+    assert r.choose(None, 1.0, views) == 1
+    assert r.stats()["switches"] == 0
+    # large gap does: migrate
+    views[0].ci = 10.0
+    views[1].ci = 600.0
+    assert r.choose(None, 2.0, views) == 0
+    assert r.stats()["switches"] == 1
+
+
+def test_carbon_greedy_load_cap_overflows():
+    r = make_router("carbon_greedy", 2, load_cap_tokens=100)
+    views = [_View(ci=100.0, tokens=500), _View(ci=700.0, tokens=0)]
+    assert r.choose(None, 0.0, views) == 1      # preferred site saturated
+    assert r.stats()["overflows"] == 1
+    views[0].tokens = 0
+    assert r.choose(None, 1.0, views) == 0      # room again: back to cur
+
+
+def test_unknown_router_raises():
+    with pytest.raises(KeyError):
+        make_router("definitely-not-a-router", 2)
+
+
+# ---------------------------------------------------------------------------
+# fleet simulation invariants
+# ---------------------------------------------------------------------------
+
+def test_request_conservation_across_sites():
+    """Every generated request is routed to exactly one site and
+    completes there (routed == completed == generated)."""
+    res = run_fleet_simulation(two_region_fleet("least_loaded"))
+    n = res.cfg.workload.n_requests
+    assert np.all(res.assignments >= 0)
+    assert sum(len(s.requests) for s in res.sites) == n
+    rids = sorted(r.rid for s in res.sites for r in s.requests)
+    assert rids == list(range(n))               # no duplication, no loss
+    assert all(r.t_done >= 0 for r in res.requests)
+    for s in res.sites:
+        done_decode = int(np.sum(s.stages.n_decode_tokens))
+        assert done_decode == sum(r.decode_tokens for r in s.requests)
+
+
+def test_fleet_energy_is_sum_of_site_eq23_energies():
+    """Fleet-total energy == sum over sites of Eq. 2-3 operational
+    energy recomputed from each site's own stage log."""
+    cfg = two_region_fleet("round_robin", devices=("a100", "h100"))
+    res = run_fleet_simulation(cfg)
+    per_site = []
+    for s in res.sites:
+        rep = operational_energy(s.stages.mfu, s.stages.dur_s,
+                                 PowerModel(s.site.device),
+                                 n_devices=s.site.n_devices, pue=cfg.pue)
+        assert rep.energy_wh == pytest.approx(s.energy.energy_wh)
+        per_site.append(rep.energy_wh)
+    assert res.summary()["energy_wh"] == pytest.approx(sum(per_site))
+
+
+def test_carbon_greedy_beats_round_robin_on_divergent_ci():
+    """Acceptance pin: on a two-region trace with divergent CI
+    (hydro ~70 vs coal ~720 gCO2/kWh) the carbon-greedy geo-router
+    reduces fleet operational emissions vs round-robin."""
+    rr = run_fleet_simulation(two_region_fleet("round_robin")).summary()
+    cg = run_fleet_simulation(two_region_fleet("carbon_greedy")).summary()
+    assert cg["carbon_operational_g"] < rr["carbon_operational_g"]
+    # both fleets serve the full workload
+    assert cg["n_requests_done"] == rr["n_requests_done"] == 48
+
+
+def test_single_site_fleet_matches_single_site_simulator():
+    """One site + round-robin == the classic run_simulation (the
+    single-site path is the trivial fleet)."""
+    wl = small_workload()
+    sched = SchedulerConfig(batch_cap=16)
+    fleet = FleetConfig(model=LLAMA3_8B,
+                        sites=(SiteConfig(name="only", scheduler=sched),),
+                        workload=wl)
+    fres = run_fleet_simulation(fleet)
+    sres = run_simulation(SimConfig(model=LLAMA3_8B, workload=wl,
+                                    scheduler=sched))
+    log_f, log_s = fres.sites[0].stages, sres.stages
+    np.testing.assert_array_equal(log_f.start_s, log_s.start_s)
+    np.testing.assert_array_equal(log_f.dur_s, log_s.dur_s)
+    np.testing.assert_array_equal(log_f.mfu, log_s.mfu)
+    np.testing.assert_array_equal(log_f.batch_size, log_s.batch_size)
+    assert fres.sites[0].energy.energy_wh == pytest.approx(
+        energy_report(sres, pue=fleet.pue).energy_wh)
+
+
+def test_run_simulation_accepts_injected_router():
+    """Satellite: run_simulation(router=...) with a caller-built
+    round-robin replica router reproduces the default path exactly."""
+    wl = small_workload()
+    cfg = SimConfig(model=LLAMA3_8B, workload=wl,
+                    scheduler=SchedulerConfig(batch_cap=16), n_replicas=2)
+    budget = kv_budget_tokens(LLAMA3_8B, DEVICES[cfg.device], 1, 1)
+    sched = dataclasses.replace(cfg.scheduler, kv_budget_tokens=budget)
+    default = run_simulation(cfg)
+    injected = run_simulation(cfg, router=RoundRobinRouter(2, sched))
+    np.testing.assert_array_equal(default.stages.start_s,
+                                  injected.stages.start_s)
+    np.testing.assert_array_equal(default.stages.dur_s,
+                                  injected.stages.dur_s)
+
+
+def test_sticky_routing_keeps_continuous_batching():
+    """Regression: a sticky geo-router concentrating all load on one
+    site must not serialize that site to batch-size-1 execution (the
+    admission gate must ignore idle sites' stale clocks)."""
+    cg = run_fleet_simulation(two_region_fleet("carbon_greedy", n=64))
+    rr = run_fleet_simulation(two_region_fleet("round_robin", n=64))
+    busy = max(cg.sites, key=lambda s: len(s.requests))
+    assert len(busy.requests) == 64          # all load on the clean site
+    assert float(np.mean(busy.stages.batch_size)) > 1.2
+    s_cg, s_rr = cg.summary(), rr.summary()
+    # concentrating load must not blow up latency vs round-robin by
+    # orders of magnitude (it did when admission was serialized)
+    assert s_cg["ttft_p50_s"] < 10 * max(s_rr["ttft_p50_s"], 1e-3)
+    assert s_cg["duration_s"] < 2 * s_rr["duration_s"]
+
+
+def test_blocked_site_does_not_stall_fleet():
+    """Regression: a site whose replica can never admit its queued
+    request (KV budget too small) must not terminate the whole fleet
+    loop — the other site's work still completes."""
+    tiny = SchedulerConfig(batch_cap=16, kv_budget_tokens=8)
+    roomy = SchedulerConfig(batch_cap=16)
+    cfg = FleetConfig(
+        model=LLAMA3_8B,
+        sites=(SiteConfig(name="blocked", scheduler=tiny),
+               SiteConfig(name="ok", scheduler=roomy)),
+        workload=small_workload(n=16),       # min_len 64 > 8-token budget
+        router="round_robin",
+        auto_kv_budget=False)
+    res = run_fleet_simulation(cfg)
+    ok = next(s for s in res.sites if s.site.name == "ok")
+    blocked = next(s for s in res.sites if s.site.name == "blocked")
+    assert len(ok.requests) == 8
+    assert all(r.t_done >= 0 for r in ok.requests)     # fully served
+    assert all(r.t_done < 0 for r in blocked.requests)  # parked, not lost
+    assert len(blocked.requests) == 8
+
+
+def test_solar_site_offsets_emissions():
+    """A site with solar+battery ends up with net emissions below its
+    no-solar counterfactual (offset > 0, paper Table 2 direction)."""
+    cfg = two_region_fleet("round_robin")
+    solar_site = dataclasses.replace(
+        cfg.sites[0], solar_capacity_w=600.0, battery_capacity_wh=100.0)
+    cfg = dataclasses.replace(cfg, sites=(solar_site, cfg.sites[1]))
+    res = run_fleet_simulation(cfg)
+    s0 = res.sites[0].cosim
+    assert s0["net_emissions_kg"] <= s0["total_emissions_nosolar_kg"]
+    summary = res.summary()
+    assert summary["carbon_offset_pct"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# sweep-engine integration
+# ---------------------------------------------------------------------------
+
+def test_fleet_scenario_executes_and_caches(tmp_path):
+    from repro.sweep import ResultCache, Scenario, SweepRunner
+    cfg = two_region_fleet("carbon_greedy", n=24)
+    sc = Scenario(cfg=cfg, params={"router": "carbon_greedy"},
+                  tag="fleet/test", pue=cfg.pue)
+    cache = ResultCache(tmp_path / "cache")
+    r1, s1 = SweepRunner(cache=cache).run([sc])
+    assert s1.executed == 1
+    m = r1[0]["metrics"]
+    # fleet-total and per-site energy/carbon columns
+    for col in ("energy_wh", "carbon_operational_g", "carbon_total_g",
+                "carbon_offset_pct", "ttft_p50_s",
+                "s0-hydro_energy_wh", "s0-hydro_carbon_g",
+                "s1-coal_energy_wh", "s1-coal_carbon_g"):
+        assert col in m, col
+    r2, s2 = SweepRunner(cache=cache).run([sc])
+    assert s2.executed == 0 and s2.cache_hits == 1
+    assert r2[0]["metrics"] == pytest.approx(m)
+
+
+def test_fleet_smoke_sweep_has_required_axes():
+    """Acceptance: the fleet smoke sweep covers >= 2 sites x >= 2
+    router policies x >= 2 CI trace pairs."""
+    from repro.sweep import SWEEPS
+    scenarios = SWEEPS["fleet"].build(True)
+    assert all(len(s.cfg.sites) >= 2 for s in scenarios)
+    assert len({s.params["router"] for s in scenarios}) >= 2
+    assert len({s.params["ci"] for s in scenarios}) >= 2
+
+
+def test_post_axes_parameterize_postprocessor():
+    """GridSpec axes under "post." land in post_params (carbon-aware
+    co-sim axes) and key the cache, leaving the SimConfig untouched."""
+    from repro.sweep import GridSpec
+    from repro.sim import PAPER_DEFAULT
+    spec = GridSpec(base=PAPER_DEFAULT, post="microgrid_cosim",
+                    axes={"post.solar_capacity_w": [0.0, 600.0],
+                          "post.ci_trace": ["hydro", "coal"]})
+    scenarios = spec.expand()
+    assert len(scenarios) == 4
+    assert {s.post_params["solar_capacity_w"] for s in scenarios} == \
+        {0.0, 600.0}
+    assert all(s.cfg == PAPER_DEFAULT for s in scenarios)
+    assert len({s.key for s in scenarios}) == 4
+    assert scenarios[0].params == {"solar_capacity_w": 0.0,
+                                   "ci_trace": "hydro"}
+
+
+def test_ci_trace_registry():
+    from repro.core.datasets import CI_TRACES, ci_trace_signal
+    hydro = ci_trace_signal("hydro", 2.0)
+    coal = ci_trace_signal("coal", 2.0)
+    assert float(coal.values.mean()) > 3 * float(hydro.values.mean())
+    with pytest.raises(KeyError):
+        ci_trace_signal("atlantis", 2.0)
+    assert set(CI_TRACES) >= {"caiso", "coal", "hydro"}
+    # a region east of CAISO sees its evening ramp EARLIER in absolute
+    # sim time (timezone ahead)
+    west = ci_trace_signal("caiso", 24.0)
+    east = ci_trace_signal("caiso-east", 24.0)
+    peak = lambda s: float(s.times[np.argmax(s.values)])
+    assert peak(east) < peak(west)

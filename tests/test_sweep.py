@@ -108,7 +108,7 @@ def test_record_has_energy_carbon_columns_and_csv(tmp_path):
 def test_smoke_sweeps_expand_for_every_figure():
     from repro.sweep import SWEEPS
     assert set(SWEEPS) == {"fig1", "fig2", "fig3", "fig4", "fig5",
-                           "exp5", "table2"}
+                           "exp5", "table2", "carbon", "fleet"}
     for name, sweep in SWEEPS.items():
         scenarios = sweep.build(True)
         assert scenarios, name
