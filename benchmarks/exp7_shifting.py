@@ -1,0 +1,28 @@
+"""Exp 7 (beyond-paper): request-level temporal carbon-aware shifting.
+
+Sweeps admission policy (immediate / threshold_defer / forecast_window)
+x CI forecaster (oracle / persistence / diurnal template) x deferral
+deadline x CI trace set x solar sizing through ``repro.schedule`` +
+``repro.fleet`` — the request-granularity reproduction of the paper's
+renewable-offset analysis: how much operational carbon temporal
+deferral saves, priced against the latency each workload class pays.
+Every scenario pins the same co-sim horizon so idle energy cancels
+across the policy axis.
+
+Headline derived check: on the divergent evening-ramp pair with oracle
+forecasts, deferral cuts emissions vs immediate admission while the
+interactive class's p99 TTFT stays within its SLO.
+
+Grid declaration: ``repro/sweep/scenarios.py`` ("shift").
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_main, run_paper_sweep
+
+
+def run(n_requests=None, smoke: bool = False):
+    return run_paper_sweep("shift", smoke=smoke, n_requests=n_requests)
+
+
+if __name__ == "__main__":
+    bench_main("shift")

@@ -5,7 +5,8 @@ simulations into a fleet-level energy/carbon/latency report.
 """
 from repro.fleet.config import FleetConfig, SiteConfig
 from repro.fleet.routing import (ROUTERS, CarbonGreedyFleetRouter,
-                                 FleetRouter, LeastLoadedFleetRouter,
+                                 CarbonSloFleetRouter, FleetRouter,
+                                 LeastLoadedFleetRouter,
                                  RoundRobinFleetRouter, RoundRobinRouter,
                                  make_router)
 from repro.fleet.simulation import (FleetResult, LoopSite, SiteResult,
@@ -13,9 +14,9 @@ from repro.fleet.simulation import (FleetResult, LoopSite, SiteResult,
 
 __all__ = [
     "FleetConfig", "SiteConfig",
-    "ROUTERS", "CarbonGreedyFleetRouter", "FleetRouter",
-    "LeastLoadedFleetRouter", "RoundRobinFleetRouter", "RoundRobinRouter",
-    "make_router",
+    "ROUTERS", "CarbonGreedyFleetRouter", "CarbonSloFleetRouter",
+    "FleetRouter", "LeastLoadedFleetRouter", "RoundRobinFleetRouter",
+    "RoundRobinRouter", "make_router",
     "FleetResult", "LoopSite", "SiteResult", "drive",
     "run_fleet_simulation",
 ]

@@ -16,9 +16,10 @@ Everything here is plain dataclasses over primitives, so a
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.schedule.config import ScheduleConfig
 from repro.sim.execmodel import ExecModelConfig
 from repro.sim.requests import WorkloadConfig
 from repro.sim.scheduler import SchedulerConfig
@@ -58,11 +59,19 @@ class FleetConfig:
         default_factory=WorkloadConfig)
     router: str = "round_robin"       # repro.fleet.routing.ROUTERS key
     router_params: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # temporal admission gate ahead of the router (repro.schedule);
+    # default immediate == the gate is a no-op
+    schedule: ScheduleConfig = dataclasses.field(
+        default_factory=ScheduleConfig)
     execmodel: ExecModelConfig = dataclasses.field(
         default_factory=ExecModelConfig)
     auto_kv_budget: bool = True
     pue: float = 1.2
     resolution_s: float = 60.0        # Eq. 5 bin width for site profiles
+    # fixed co-sim horizon (s): pins the idle-energy accounting window
+    # so scenarios differing only in admission policy charge identical
+    # idle carbon and stay comparable; None = size from the stage logs
+    horizon_s: Optional[float] = None
 
     def __post_init__(self):
         self.sites = tuple(self.sites)

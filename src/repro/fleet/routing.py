@@ -15,6 +15,10 @@ each arriving request, inside the fleet simulation loop:
     applied at per-request granularity — the fleet "current" site only
     switches when the CI gap, over the expected dwell at an estimated
     per-request energy, amortizes the migration penalty.
+  - ``carbon_slo``: latency-constrained geo-routing — the min-CI site
+    whose predicted queue delay (outstanding tokens over an estimated
+    service rate) stays under the request's SLO; least-loaded fallback
+    when no site qualifies.
 
 Site routers see live site state through a small protocol implemented
 by the fleet simulation's site runtimes:
@@ -25,6 +29,7 @@ by the fleet simulation's site runtimes:
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 
 if TYPE_CHECKING:   # avoid import cycle with repro.sim at module load
@@ -154,10 +159,53 @@ class CarbonGreedyFleetRouter(FleetRouter):
                 "overflows": float(self._overflows)}
 
 
+class CarbonSloFleetRouter(FleetRouter):
+    """SLO-bounded carbon routing (the ROADMAP's latency-constrained
+    carbon_greedy variant).
+
+    Each site's queue delay is predicted from the O(1) queue-pressure
+    counter: ``outstanding_tokens / tokens_per_s`` (a deliberately
+    coarse M/D/1-style estimate — the counter is exact, the service
+    rate is the knob). Candidates are the sites whose predicted delay
+    stays under the request's SLO (``Request.slo_s``, falling back to
+    ``default_slo_s`` for untagged/deferrable work); among them the
+    lowest-CI site wins. When no site qualifies the router degrades to
+    least-loaded — latency first, carbon second.
+    """
+    name = "carbon_slo"
+
+    def __init__(self, n_sites: int, default_slo_s: float = 30.0,
+                 tokens_per_s: float = 4000.0):
+        self._n = n_sites
+        self.default_slo_s = default_slo_s
+        self.tokens_per_s = max(tokens_per_s, 1e-9)
+        self._fallbacks = 0
+
+    def _slo(self, req) -> float:
+        slo = getattr(req, "slo_s", math.inf) if req is not None \
+            else math.inf
+        return slo if math.isfinite(slo) else self.default_slo_s
+
+    def choose(self, req, t_s, sites) -> int:
+        slo = self._slo(req)
+        delays = [sites[i].outstanding_tokens() / self.tokens_per_s
+                  for i in range(self._n)]
+        ok = [i for i in range(self._n) if delays[i] <= slo]
+        if not ok:
+            self._fallbacks += 1
+            return min(range(self._n),
+                       key=lambda i: (sites[i].outstanding_tokens(), i))
+        return min(ok, key=lambda i: (sites[i].ci_at(t_s), i))
+
+    def stats(self) -> Dict[str, float]:
+        return {"slo_fallbacks": float(self._fallbacks)}
+
+
 ROUTERS = {
     "round_robin": RoundRobinFleetRouter,
     "least_loaded": LeastLoadedFleetRouter,
     "carbon_greedy": CarbonGreedyFleetRouter,
+    "carbon_slo": CarbonSloFleetRouter,
 }
 
 

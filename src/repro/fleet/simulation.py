@@ -30,18 +30,25 @@ from repro.core.power import DEVICES, PowerModel
 from repro.core.signals import Signal
 from repro.fleet.config import FleetConfig, SiteConfig
 from repro.fleet.routing import RoundRobinRouter, make_router
+from repro.schedule import (apply_admission, class_stats,
+                            fleet_ci_forecast, make_admission,
+                            make_forecaster)
 from repro.sim.execmodel import ExecutionModel
 from repro.sim.requests import Request, generate
 from repro.sim.simulator import StageLog, kv_budget_tokens, latency_stats
 
 
-def _signal_horizon_h(requests: List[Request]) -> float:
-    """CI signals must cover every routing decision — and those happen
-    exactly at request arrivals, so size the horizon from the actual
-    last arrival (the workload is generated before the sites). The
-    post-sim co-sim regenerates longer traces if the service tail
-    outruns this (the generators are prefix-stable in their seed)."""
-    last_h = max((r.arrival_s for r in requests), default=0.0) / 3600.0
+def _signal_horizon_h(requests: List[Request],
+                      defer_slack_s: float = 0.0) -> float:
+    """CI signals must cover every routing decision — those happen at
+    request *release* times, which admission may push up to a deadline
+    past the last arrival (``defer_slack_s`` bounds that from the
+    workload config, since releases are assigned after the sites'
+    signals exist). The post-sim co-sim regenerates longer traces if
+    the service tail outruns this (the generators are prefix-stable in
+    their seed)."""
+    last_h = (max((r.arrival_s for r in requests), default=0.0)
+              + defer_slack_s) / 3600.0
     return max(last_h * 1.1 + 0.5, 1.0)
 
 
@@ -68,8 +75,9 @@ class LoopSite:
 
     def add(self, req: Request):
         """Route one request into the site. Replicas that were idle
-        fast-forward to the arrival: they cannot start earlier, and
-        their stale clocks must not gate fleet-wide admission."""
+        fast-forward to the request's ready time (its admission release,
+        == arrival when no policy parked it): they cannot start earlier,
+        and their stale clocks must not gate fleet-wide admission."""
         self.routed.append(req)
         self._outstanding_tokens += req.prefill_tokens + req.decode_tokens
         idle = {k for k, r in enumerate(self.replicas.replicas)
@@ -80,7 +88,7 @@ class LoopSite:
         else:
             bump = {target} & idle
         for k in bump:
-            self.clocks[k] = max(self.clocks[k], req.arrival_s)
+            self.clocks[k] = max(self.clocks[k], req.ready_s)
 
     def note_done(self, done: List[Request]):
         for r in done:
@@ -104,12 +112,14 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
 
     ``route(req)`` assigns one arriving request to a site (calling
     ``LoopSite.add`` on its choice). Admission gating: a request is
-    routed once its arrival precedes the next *processing* event —
-    the earliest clock among replicas with work (idle replicas don't
-    hold admission back; ``LoopSite.add`` fast-forwards them, so no
-    request is ever served before it arrives).
+    routed once its *ready* time — arrival, or the release an admission
+    policy assigned (``repro.schedule``) — precedes the next
+    *processing* event, the earliest clock among replicas with work
+    (idle replicas don't hold admission back; ``LoopSite.add``
+    fast-forwards them, so no request is ever served before it is
+    ready).
     """
-    pending = sorted(requests, key=lambda r: r.arrival_s)
+    pending = sorted(requests, key=lambda r: r.ready_s)
     pi = 0
     pairs = [(s, i) for s, st in enumerate(sites)
              for i in range(len(st.clocks))]
@@ -122,12 +132,12 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
             s, i = min(candidates, key=lambda p: sites[p[0]].clocks[p[1]])
             t_event = sites[s].clocks[i]
         elif pi < len(pending):
-            s, t_event = None, pending[pi].arrival_s
+            s, t_event = None, pending[pi].ready_s
         else:
             break
 
-        if pi < len(pending) and pending[pi].arrival_s <= t_event:
-            while pi < len(pending) and pending[pi].arrival_s <= t_event:
+        if pi < len(pending) and pending[pi].ready_s <= t_event:
+            while pi < len(pending) and pending[pi].ready_s <= t_event:
                 route(pending[pi])
                 pi += 1
             continue    # re-select: routed work may be an earlier event
@@ -141,7 +151,7 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
         if not prefills and not decodes:
             # running empty and waiting blocked on this replica
             if pi < len(pending):
-                st.clocks[i] = max(now, pending[pi].arrival_s)
+                st.clocks[i] = max(now, pending[pi].ready_s)
             else:
                 # nothing will ever free this replica's KV budget;
                 # park it instead of stalling the rest of the fleet
@@ -242,6 +252,11 @@ class SiteResult:
     load: Signal                       # Eq. 5 profile (idle-filled)
     cosim: Dict[str, float]            # microgrid co-sim metrics
     avg_ci: float
+    # request-attributable operational emissions: per-stage Eq. 2-3
+    # energy x the live grid CI at each stage (no idle fill) — the
+    # carbon that temporal/spatial scheduling actually moves, immune to
+    # the Eq. 5 bin-quantization of the co-sim totals
+    carbon_active_g: float = 0.0
 
     @property
     def carbon_operational_g(self) -> float:
@@ -261,6 +276,7 @@ class FleetResult:
     requests: List[Request]
     assignments: np.ndarray            # request rid -> site index
     router_stats: Dict[str, float]
+    admission_stats: Dict[str, float]  # repro.schedule.apply_admission
     duration_s: float
 
     def summary(self) -> Dict[str, float]:
@@ -283,6 +299,7 @@ class FleetResult:
             "duration_s": self.duration_s,
             "throughput_qps": done / max(self.duration_s, 1e-9),
             "carbon_operational_g": op_g,
+            "carbon_active_g": sum(s.carbon_active_g for s in self.sites),
             "carbon_embodied_g": emb_g,
             "carbon_total_g": op_g + emb_g,
             "carbon_nosolar_g": nosolar_g,
@@ -292,12 +309,16 @@ class FleetResult:
             "n_requests_done": float(done),
             "router_switches": self.router_stats.get("switches", 0.0),
             **latency_stats(self.requests),
+            # per-workload-class latency/deferral columns (repro.schedule)
+            **class_stats(self.requests),
+            **self.admission_stats,
         }
         for s in self.sites:
             p = s.site.name
             out[f"{p}_n_requests"] = float(len(s.requests))
             out[f"{p}_energy_wh"] = s.energy.energy_wh
             out[f"{p}_carbon_g"] = s.carbon_operational_g
+            out[f"{p}_carbon_active_g"] = s.carbon_active_g
             out[f"{p}_avg_ci"] = s.avg_ci
             out[f"{p}_renewable_share_pct"] = s.cosim["renewable_share_pct"]
         # plain floats only: numpy scalars would stringify through the
@@ -308,14 +329,32 @@ class FleetResult:
 def run_fleet_simulation(cfg: FleetConfig,
                          max_sim_s: float = 10_000_000.0) -> FleetResult:
     requests = generate(cfg.workload)
-    horizon_h = _signal_horizon_h(requests)
+    wl = cfg.workload
+    defer_slack = (wl.deferrable_deadline_s
+                   if wl.deferrable_frac > 0.0 else 0.0)
+    horizon_h = _signal_horizon_h(requests, defer_slack)
     sites = [_SiteRuntime(cfg, s, horizon_h) for s in cfg.sites]
+
+    # ---- temporal admission gate (repro.schedule), ahead of routing ----
+    sched = cfg.schedule
+    admission_stats: Dict[str, float] = {"n_deferred": 0.0,
+                                         "backlog_peak": 0.0}
+    if sched.policy != "immediate":
+        forecaster = make_forecaster(sched.forecaster,
+                                     **sched.forecaster_params)
+        policy = make_admission(sched.policy, **sched.policy_params)
+        forecast = fleet_ci_forecast(forecaster, [st.ci for st in sites],
+                                     stat=sched.ci_stat)
+        admission_stats = apply_admission(requests, policy, forecast)
+
     router = make_router(cfg.router, len(sites), **cfg.router_params)
     assignments = np.full(len(requests), -1, np.int32)
 
     def route(req: Request):
-        # the geo decision sees each site's CI at the request's arrival
-        target = router.choose(req, req.arrival_s, sites)
+        # the geo decision sees each site's CI at the moment the
+        # request becomes routable (its admission release; == arrival
+        # under immediate admission)
+        target = router.choose(req, req.ready_s, sites)
         assignments[req.rid] = target
         sites[target].add(req)
 
@@ -323,7 +362,8 @@ def run_fleet_simulation(cfg: FleetConfig,
 
     # ---- roll up: Eq. 2-3 energy, Eq. 5 profiles, microgrid co-sim ----
     stage_logs = [st.stage_log() for st in sites]
-    t_end = max([log.total_duration() for log in stage_logs] + [1.0])
+    t_end = max([log.total_duration() for log in stage_logs]
+                + [1.0, cfg.horizon_s or 0.0])
     if t_end / 3600.0 > horizon_h:
         # the service tail outran the arrival-sized CI traces: extend
         # them (prefix-stable generators, so the routed prefix is the
@@ -351,11 +391,22 @@ def run_fleet_simulation(cfg: FleetConfig,
                 soc_max=st.site.soc_max),
             step_s=cfg.resolution_s)
         cos = run_cosim(load, solar, st.ci, grid_cfg)
+        # stage-attributed carbon: same per-record energy convention as
+        # operational_energy, weighted by the CI each stage ran under
+        if len(log.start_s):
+            stage_wh = (np.asarray(pm.power(log.mfu)) * log.dur_s / 3600.0
+                        * st.site.n_devices * cfg.pue)
+            active_g = float(np.sum(stage_wh * st.ci.at(log.start_s))
+                             / 1000.0)
+        else:
+            active_g = 0.0
         results.append(SiteResult(
             site=st.site, stages=log, requests=st.routed, energy=energy,
             load=load, cosim=dict(cos.metrics),
-            avg_ci=float(np.mean(st.ci.at(load.times)))))
+            avg_ci=float(np.mean(st.ci.at(load.times))),
+            carbon_active_g=active_g))
 
     return FleetResult(cfg=cfg, sites=results, requests=requests,
                        assignments=assignments,
-                       router_stats=router.stats(), duration_s=t_end)
+                       router_stats=router.stats(),
+                       admission_stats=admission_stats, duration_s=t_end)

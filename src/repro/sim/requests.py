@@ -4,13 +4,25 @@ Matches the paper's Table 1 parameterization: request lengths drawn from
 a Zipf distribution over [min_len, max_len] (theta=0.6 in the
 integration case study), arrivals Poisson at a configured QPS, and a
 prefill:decode token-ratio knob.
+
+Workload classes (``repro.schedule``): a configurable fraction of
+requests is tagged ``deferrable`` — batch-style work (evals, embedding
+jobs, summarization queues) that tolerates delay up to a per-request
+deadline. The rest stay ``interactive`` with a TTFT SLO. Class tags are
+drawn *after* the arrival/length streams, so a workload with
+``deferrable_frac=0`` is bit-identical to one generated before classes
+existed.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List
 
 import numpy as np
+
+INTERACTIVE = "interactive"
+DEFERRABLE = "deferrable"
 
 
 @dataclasses.dataclass
@@ -19,12 +31,25 @@ class Request:
     arrival_s: float
     prefill_tokens: int
     decode_tokens: int
+    # workload class (repro.schedule): interactive requests carry a TTFT
+    # SLO; deferrable requests carry an absolute completion deadline and
+    # may be parked by an admission policy until release_s
+    klass: str = INTERACTIVE
+    slo_s: float = math.inf           # TTFT SLO (interactive)
+    deadline_s: float = math.inf      # absolute completion deadline
+    release_s: float = -1.0           # admission release time (<0 = arrival)
     # runtime state
     decoded: int = 0
     prefilled: bool = False
     prefill_done: int = 0        # prompt tokens prefilled so far (chunking)
     t_first_token: float = -1.0
     t_done: float = -1.0
+
+    @property
+    def ready_s(self) -> float:
+        """When the request becomes visible to routing: its admission
+        release time if an admission policy parked it, else arrival."""
+        return self.release_s if self.release_s >= 0 else self.arrival_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +63,12 @@ class WorkloadConfig:
     max_len: int = 4096
     pd_ratio: float = 20.0            # prefill:decode token ratio
     seed: int = 0
+    # workload classes (repro.schedule): fraction of requests tagged
+    # deferrable, their relative completion deadline, and the TTFT SLO
+    # attached to the interactive class
+    deferrable_frac: float = 0.0
+    deferrable_deadline_s: float = 3600.0
+    interactive_slo_s: float = 30.0
 
 
 def zipf_lengths(rng, n: int, theta: float, lo: int, hi: int) -> np.ndarray:
@@ -63,7 +94,24 @@ def generate(cfg: WorkloadConfig) -> List[Request]:
     pf = cfg.pd_ratio / (cfg.pd_ratio + 1.0)
     prefills = np.maximum(1, np.round(lengths * pf)).astype(int)
     decodes = np.maximum(1, lengths - prefills).astype(int)
-    return [Request(rid=i, arrival_s=float(arrivals[i]),
-                    prefill_tokens=int(prefills[i]),
-                    decode_tokens=int(decodes[i]))
-            for i in range(cfg.n_requests)]
+    # class tags draw AFTER the arrival/length streams: frac=0 consumes
+    # no randomness and reproduces the pre-class workload bit-for-bit
+    if cfg.deferrable_frac > 0.0:
+        deferrable = rng.random(cfg.n_requests) < cfg.deferrable_frac
+    else:
+        deferrable = np.zeros(cfg.n_requests, bool)
+    out = []
+    for i in range(cfg.n_requests):
+        if deferrable[i]:
+            out.append(Request(
+                rid=i, arrival_s=float(arrivals[i]),
+                prefill_tokens=int(prefills[i]),
+                decode_tokens=int(decodes[i]), klass=DEFERRABLE,
+                deadline_s=float(arrivals[i]) + cfg.deferrable_deadline_s))
+        else:
+            out.append(Request(
+                rid=i, arrival_s=float(arrivals[i]),
+                prefill_tokens=int(prefills[i]),
+                decode_tokens=int(decodes[i]), klass=INTERACTIVE,
+                slo_s=cfg.interactive_slo_s))
+    return out

@@ -35,7 +35,12 @@ from repro.sim.simulator import SimConfig
 # v2: shared fleet/single-site event loop — admission is gated on the
 # next processing event instead of the min clock across all replicas
 # (single-replica results are unchanged; multi-replica skew differs).
-SCHEMA_VERSION = 2
+# v3: config schema extension for repro.schedule (workload classes on
+# WorkloadConfig, ScheduleConfig + horizon_s on FleetConfig) changes
+# every config's digest even though metrics under the defaults
+# (immediate admission, no deferrable class) are numerically identical
+# to v2 — pinned by tests/test_schedule.py.
+SCHEMA_VERSION = 3
 
 # Default static grid carbon intensity for the report's carbon columns
 # (gCO2eq/kWh; CAISO-ish annual average — the paper's co-sim case study

@@ -26,12 +26,37 @@ def flatten(records: Sequence[dict]) -> List[Dict[str, object]]:
     return rows
 
 
+# Per-workload-class scheduling columns (repro.schedule.metrics +
+# admission stats): pinned into one contiguous, stably-ordered group in
+# CSV/table output so shifting experiments read as tidy data even when
+# mixed with non-fleet rows (absent values render empty via restval).
+SCHEDULE_COLUMNS = [
+    "n_interactive", "n_deferrable", "deferred_fraction", "n_deferred",
+    "mean_deferral_delay_s", "max_deferral_delay_s", "backlog_peak",
+    "interactive_ttft_p50_s", "interactive_ttft_p99_s",
+    "interactive_e2e_p50_s", "interactive_e2e_p99_s",
+    "deferrable_e2e_p50_s", "deferrable_e2e_p99_s",
+    "interactive_slo_violations", "deadline_violations",
+]
+
+
 def _columns(rows: Sequence[Dict[str, object]]) -> List[str]:
     cols: List[str] = []
     for row in rows:
         for key in row:
             if key not in cols:
                 cols.append(key)
+    # group the per-class scheduling columns contiguously (in their
+    # canonical order) at the position of the first one encountered;
+    # cache_hit stays last
+    sched = [c for c in SCHEDULE_COLUMNS if c in cols]
+    if sched:
+        first = min(cols.index(c) for c in sched)
+        rest = [c for c in cols if c not in sched]
+        cols = rest[:first] + sched + rest[first:]
+    if "cache_hit" in cols:
+        cols.remove("cache_hit")
+        cols.append("cache_hit")
     return cols
 
 

@@ -106,7 +106,9 @@ def _execute_fleet_scenario(scenario: Scenario) -> dict:
                  "n_devices": cfg.n_devices,
                  "pue": cfg.pue,
                  "post": None,
-                 "router": cfg.router},
+                 "router": cfg.router,
+                 "policy": cfg.schedule.policy,
+                 "forecaster": cfg.schedule.forecaster},
     }
 
 

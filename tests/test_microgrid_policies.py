@@ -124,3 +124,80 @@ def test_multi_region_routing_lowers_ci():
     assign, stats = multi_region(load, np.stack([ci0, ci1]))
     assert stats["avg_ci_routed"] <= stats["avg_ci_region0"] + 1e-9
     assert 0 < stats["switches"] < 200
+
+
+def test_multi_region_migration_penalty_amortization():
+    """The switch condition gap * load/1000 * dwell_h > penalty must
+    gate exactly: just-too-small CI gaps never migrate, amortizing
+    gaps always do, and an infinite penalty pins the initial region."""
+    T = 120
+    # region 0 starts cheapest, region 1 becomes cheaper by `gap` at t=60
+    gap = 50.0
+    ci0 = np.full(T, 300.0)
+    ci1 = np.concatenate([np.full(60, 400.0), np.full(60, 300.0 - gap)])
+    regions = np.stack([ci0, ci1])
+    load = np.full(T, 200.0)
+    # amortized benefit per switch: gap * 0.2 kW * dwell_h
+    dwell_steps = 60
+    dwell_h = dwell_steps * 60.0 / 3600.0
+    benefit = gap * 200.0 / 1000.0 * dwell_h
+    _, stats_hi = multi_region(load, regions,
+                               migration_penalty_g=benefit * 1.01,
+                               expected_dwell_steps=dwell_steps)
+    assert stats_hi["switches"] == 0          # penalty not amortized
+    assign, stats_lo = multi_region(load, regions,
+                                    migration_penalty_g=benefit * 0.99,
+                                    expected_dwell_steps=dwell_steps)
+    assert stats_lo["switches"] == 1          # penalty amortized
+    assert np.all(assign[:60] == 0) and np.all(assign[60:] == 1)
+    _, stats_inf = multi_region(load, regions,
+                                migration_penalty_g=np.inf)
+    assert stats_inf["switches"] == 0
+
+
+def test_multi_region_zero_penalty_always_tracks_argmin():
+    rng = np.random.default_rng(5)
+    regions = rng.uniform(50, 800, size=(3, 200))
+    load = np.full(200, 100.0)
+    assign, _ = multi_region(load, regions, migration_penalty_g=0.0)
+    np.testing.assert_array_equal(assign, np.argmin(regions, axis=0))
+
+
+def test_solar_following_min_frac_floor_and_degenerate_solar():
+    """The QoS floor: capacity never scales below min_frac of full,
+    and with no solar at all the renormalized load is unchanged."""
+    rng = np.random.default_rng(7)
+    load = rng.uniform(50, 300, 500)
+    solar = np.asarray(solar_signal(500 / 60, capacity_w=600,
+                                    seed=7).values)[:500]
+    out = solar_following(load, solar, min_frac=0.4)
+    # pre-renormalization floor: out >= 0.4 * load * (total_in/total_out)
+    scale = load.sum() / (load * np.clip(
+        solar / solar.max(), 0.4, 1.0)).sum()
+    assert np.all(out >= 0.4 * load * scale - 1e-9)
+    # zero solar everywhere: cap is min_frac flat -> renormalization
+    # restores the input exactly
+    np.testing.assert_allclose(
+        solar_following(load, np.zeros_like(load), min_frac=0.4), load)
+
+
+def test_threshold_deferral_backlog_bound_and_conservation():
+    """served + unserved backlog == input even when the bounded backlog
+    saturates, and the backlog never exceeds its bound by more than a
+    single step's deferral."""
+    T = 600
+    step_s = 60.0
+    dt_h = step_s / 3600.0
+    load = np.full(T, 400.0)
+    ci = np.full(T, 500.0)          # always high: defer-only regime
+    cap_wh = 50.0
+    new, stats = threshold_deferral(load, ci, ci_high=300.0, ci_low=100.0,
+                                    deferrable_frac=0.5,
+                                    max_backlog_wh=cap_wh, step_s=step_s)
+    max_step_wh = 400.0 * 0.5 * dt_h
+    assert stats["peak_backlog_wh"] <= cap_wh + max_step_wh
+    total_in = load.sum() * dt_h
+    total_out = new.sum() * dt_h + stats["unserved_backlog_wh"]
+    assert total_out == pytest.approx(total_in, rel=1e-9)
+    # once the backlog cap binds, the remaining steps pass through
+    assert np.any(new == load)
