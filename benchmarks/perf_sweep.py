@@ -1,0 +1,96 @@
+"""Sweep-engine perf trajectory: vectorized vs event-loop throughput.
+
+Times the 1k-scenario ``perf`` smoke grid (4 workloads x 16 PUE x 16
+grid-CI) through both runner modes with the cache disabled, checks the
+records agree bit-for-bit, and writes the scenarios/sec baseline to
+``BENCH_sweep.json`` at the repo root so future PRs can compare
+against it. CI runs ``--smoke --check 5`` and fails if the vectorized
+mode drops below 5x the event-loop throughput.
+
+Usage: python -m benchmarks.perf_sweep [--smoke] [--check MIN_SPEEDUP]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+# the committed/CI baseline is the smoke grid (by design: 1k scenarios
+# in seconds); a full-scale run writes its own file so it never
+# clobbers — nor is clobbered by — the smoke baseline
+_ROOT = Path(__file__).resolve().parent.parent
+BENCH_PATHS = {True: _ROOT / "BENCH_sweep.json",
+               False: _ROOT / "BENCH_sweep_full.json"}
+
+
+def measure(smoke: bool = False) -> dict:
+    from repro.sweep import SCHEMA_VERSION, SWEEPS, SweepRunner
+
+    scenarios = SWEEPS["perf"].build(smoke)
+
+    t0 = time.perf_counter()
+    ev_records, ev_stats = SweepRunner(cache=None,
+                                       mode="event_loop").run(scenarios)
+    event_loop_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ve_records, ve_stats = SweepRunner(cache=None,
+                                       mode="vectorized").run(scenarios)
+    vectorized_s = time.perf_counter() - t0
+
+    bit_identical = all(a["metrics"] == b["metrics"]
+                        for a, b in zip(ev_records, ve_records))
+    n = len(scenarios)
+    return {
+        "grid": "perf",
+        "smoke": smoke,
+        "schema": SCHEMA_VERSION,
+        "n_scenarios": n,
+        "n_trace_groups": ve_stats.trace_groups,
+        "event_loop_s": round(event_loop_s, 3),
+        "vectorized_s": round(vectorized_s, 3),
+        "event_loop_scenarios_per_s": round(n / event_loop_s, 1),
+        "vectorized_scenarios_per_s": round(n / vectorized_s, 1),
+        "speedup": round(event_loop_s / vectorized_s, 2),
+        "bit_identical": bit_identical,
+    }
+
+
+def run(smoke: bool = False):
+    """``benchmarks.run`` entry: (rows, derived, us_per_call)."""
+    t0 = time.time()
+    result = measure(smoke=smoke)
+    BENCH_PATHS[smoke].write_text(json.dumps(result, indent=1) + "\n")
+    derived = (f"speedup={result['speedup']}x"
+               f"(target>=5);bit_identical={result['bit_identical']};"
+               f"{result['n_scenarios']}scen/"
+               f"{result['n_trace_groups']}traces;"
+               f"vec={result['vectorized_scenarios_per_s']}scen_per_s")
+    return [result], derived, (time.time() - t0) * 1e6
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    check = None
+    if "--check" in args:
+        i = args.index("--check")
+        check = float(args[i + 1]) if i + 1 < len(args) else 5.0
+    rows, derived, _ = run(smoke=smoke)
+    result = rows[0]
+    print(json.dumps(result, indent=1))
+    print(f"wrote {BENCH_PATHS[smoke]}")
+    if not result["bit_identical"]:
+        print("FAIL: vectorized records diverge from event-loop records",
+              file=sys.stderr)
+        return 1
+    if check is not None and result["speedup"] < check:
+        print(f"FAIL: speedup {result['speedup']}x < required {check}x",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

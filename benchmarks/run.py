@@ -21,7 +21,7 @@ def main() -> None:
     from benchmarks import (exp5_parallelism, exp6_fleet, exp7_shifting,
                             fig1_qps_saturation, fig2_request_count,
                             fig3_pd_ratio, fig4_batch_cap, fig5_qps,
-                            table2_cosim)
+                            perf_sweep, table2_cosim)
     benches = [
         ("fig1_qps_saturation", fig1_qps_saturation.run),
         ("fig2_request_count", fig2_request_count.run),
@@ -32,6 +32,7 @@ def main() -> None:
         ("table2_cosim", table2_cosim.run),
         ("exp6_fleet", exp6_fleet.run),
         ("exp7_shifting", exp7_shifting.run),
+        ("perf_sweep", perf_sweep.run),
     ]
     args = sys.argv[1:]
     smoke = "--smoke" in args
@@ -46,7 +47,8 @@ def main() -> None:
                    if any(n.startswith(want) for want in names)]
         if not benches:
             print(f"no benchmark matches {names!r}; have "
-                  f"fig1..fig5, exp5, exp6, exp7, table2", file=sys.stderr)
+                  f"fig1..fig5, exp5, exp6, exp7, table2, perf_sweep",
+                  file=sys.stderr)
             sys.exit(2)
     # smoke-scale rows go to their own subdir so they never shadow a
     # full reproduction's results under the same path

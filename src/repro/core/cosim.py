@@ -44,6 +44,17 @@ def stages_to_load_signal(stage_start_s, stage_dur_s, stage_mfu,
     return Signal(sig.times, vals * n_devices * pue, interp="previous")
 
 
+def trace_to_load_signal(trace, power_model: PowerModel,
+                         n_devices: int = 1, pue: float = 1.0,
+                         resolution_s: float = 60.0,
+                         include_idle: bool = True) -> Signal:
+    """``stages_to_load_signal`` directly over a ``StageTrace``."""
+    return stages_to_load_signal(trace.start_s, trace.dur_s, trace.mfu,
+                                 power_model, n_devices=n_devices, pue=pue,
+                                 resolution_s=resolution_s,
+                                 include_idle=include_idle)
+
+
 def run_cosim(load: Signal, solar: Signal, ci: Signal,
               cfg: Optional[MicrogridConfig] = None) -> CosimResult:
     cfg = cfg or MicrogridConfig()

@@ -4,11 +4,17 @@
     G     = R * TP * PP                      (GPUs per deployment)
     H_i   = dt_i / 3600 * G                  (GPU-hours of stage i)
     E_op  = sum_i P(MFU_i) * H_i * PUE       (Wh)
+
+All entry points are single array passes over a stage trace; the
+``stacked_energy_reports`` variant evaluates a whole axis of PUE
+values against one shared trace (per-stage power computed once) and is
+bit-identical to calling ``operational_energy`` per value — the sweep
+engine's vectorized mode relies on that equality.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -43,19 +49,43 @@ def operational_energy(mfu: np.ndarray, stage_dur_s: np.ndarray,
                        power_model: PowerModel, n_devices: int = 1,
                        pue: float = 1.0) -> EnergyReport:
     """Eq. 3. mfu per stage (fraction), durations in seconds."""
+    return stacked_energy_reports(mfu, stage_dur_s, power_model,
+                                  n_devices=n_devices, pues=(pue,))[0]
+
+
+def stacked_energy_reports(mfu: np.ndarray, stage_dur_s: np.ndarray,
+                           power_model: PowerModel, n_devices: int = 1,
+                           pues: Sequence[float] = (1.0,)
+                           ) -> List[EnergyReport]:
+    """Eq. 3 stacked over a PUE axis: one array pass over the shared
+    stage trace (per-stage power evaluated once), then one report per
+    PUE value. Energy is linear in PUE, so the stacked reports are
+    bit-identical to per-value ``operational_energy`` calls."""
     mfu = np.asarray(mfu, np.float64)
     dt = np.asarray(stage_dur_s, np.float64)
     p = np.asarray(power_model.power(mfu))                   # W per device
-    wh = float(np.sum(p * dt) / 3600.0 * n_devices * pue)
+    e_sum = np.sum(p * dt)                                   # W*s
+    m_sum = np.sum(mfu * dt)
     dur = float(dt.sum())
     gpu_h = dur / 3600.0 * n_devices
-    return EnergyReport(
-        energy_wh=wh,
+    avg_power = float(e_sum / max(dur, 1e-12))
+    peak = float(p.max()) if len(p) else 0.0
+    avg_mfu = float(m_sum / max(dur, 1e-12))
+    return [EnergyReport(
+        energy_wh=float(e_sum / 3600.0 * n_devices * pue),
         gpu_hours=gpu_h,
-        avg_power_w=float(np.sum(p * dt) / max(dur, 1e-12)),
-        peak_power_w=float(p.max()) if len(p) else 0.0,
-        avg_mfu=float(np.sum(mfu * dt) / max(dur, 1e-12)),
+        avg_power_w=avg_power,
+        peak_power_w=peak,
+        avg_mfu=avg_mfu,
         duration_s=dur,
         n_devices=n_devices,
         pue=pue,
-    )
+    ) for pue in pues]
+
+
+def operational_energy_trace(trace, power_model: PowerModel,
+                             n_devices: int = 1,
+                             pue: float = 1.0) -> EnergyReport:
+    """Eq. 2-3 directly over a ``StageTrace``."""
+    return operational_energy(trace.mfu, trace.dur_s, power_model,
+                              n_devices=n_devices, pue=pue)

@@ -22,9 +22,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.cosim import run_cosim, stages_to_load_signal
+from repro.core.carbon import stage_attributed_carbon
+from repro.core.cosim import run_cosim, trace_to_load_signal
 from repro.core.datasets import ci_trace_signal, solar_signal
-from repro.core.energy import EnergyReport, operational_energy
+from repro.core.energy import EnergyReport, operational_energy_trace
 from repro.core.microgrid import BatteryConfig, MicrogridConfig
 from repro.core.power import DEVICES, PowerModel
 from repro.core.signals import Signal
@@ -33,9 +34,10 @@ from repro.fleet.routing import RoundRobinRouter, make_router
 from repro.schedule import (apply_admission, class_stats,
                             fleet_ci_forecast, make_admission,
                             make_forecaster)
-from repro.sim.execmodel import ExecutionModel
+from repro.sim.execmodel import ExecutionModel, cached_execution_model
 from repro.sim.requests import Request, generate
-from repro.sim.simulator import StageLog, kv_budget_tokens, latency_stats
+from repro.sim.simulator import kv_budget_tokens, latency_stats
+from repro.sim.trace import StageTrace, StageTraceBuilder
 
 
 def _signal_horizon_h(requests: List[Request],
@@ -69,9 +71,7 @@ class LoopSite:
         # not-yet-finished requests) so per-request routing decisions
         # stay O(sites), not O(outstanding requests)
         self._outstanding_tokens = 0
-        self.logs: Dict[str, list] = {k: [] for k in
-                                      ("start", "dur", "fm", "fa", "mfu",
-                                       "npt", "ndt", "rep", "bs")}
+        self.trace = StageTraceBuilder()
 
     def add(self, req: Request):
         """Route one request into the site. Replicas that were idle
@@ -94,15 +94,8 @@ class LoopSite:
         for r in done:
             self._outstanding_tokens -= r.prefill_tokens + r.decode_tokens
 
-    def stage_log(self) -> StageLog:
-        g = self.logs
-        return StageLog(
-            start_s=np.array(g["start"]), dur_s=np.array(g["dur"]),
-            flops_mlp=np.array(g["fm"]), flops_attn=np.array(g["fa"]),
-            mfu=np.array(g["mfu"]),
-            n_prefill_tokens=np.array(g["npt"]),
-            n_decode_tokens=np.array(g["ndt"]),
-            replica=np.array(g["rep"]), batch_size=np.array(g["bs"]))
+    def stage_log(self) -> StageTrace:
+        return self.trace.build()
 
 
 def drive(sites: List[LoopSite], route, requests: List[Request],
@@ -159,25 +152,27 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
             continue
 
         # chunked prefill (Sarathi) yields mixed iterations: the chunk
-        # token counts come from the scheduler, and decodes of already-
-        # prefilled sequences ride along in the same stage
+        # token counts + offsets come from the scheduler (a chunk at
+        # offset o re-reads o tokens of prior-chunk KV), and decodes of
+        # already-prefilled sequences ride along in the same stage
         plens = list(rep.last_prefill_tokens)
+        offs = list(rep.last_prefill_offsets)
         ctxs = [r.prefill_tokens + r.decoded for r in decodes]
-        cost = st.exec_model.stage_cost(plens, ctxs)
-        npt, ndt = sum(plens), len(decodes)
+        agg = st.exec_model.aggregate(plens, ctxs, offs)
+        cost = st.exec_model.stage_cost_batch(agg).row(0)
 
         # one record per pipeline stage (replica-stage granularity)
+        bs = len(prefills) + len(decodes)
         for ps in range(st.pp):
-            st.logs["start"].append(now + ps * cost.t_total
-                                    / max(st.pp, 1))
-            st.logs["dur"].append(cost.t_total)
-            st.logs["fm"].append(cost.flops_mlp)
-            st.logs["fa"].append(cost.flops_attn)
-            st.logs["mfu"].append(cost.mfu)
-            st.logs["npt"].append(npt)
-            st.logs["ndt"].append(ndt)
-            st.logs["rep"].append(i * st.pp + ps)
-            st.logs["bs"].append(len(prefills) + len(decodes))
+            st.trace.append(
+                start_s=now + ps * cost.t_total / max(st.pp, 1),
+                dur_s=cost.t_total, flops_mlp=cost.flops_mlp,
+                flops_attn=cost.flops_attn, mfu=cost.mfu,
+                n_prefill_tokens=agg.prefill_tokens[0],
+                n_decode_tokens=agg.decode_count[0],
+                replica=i * st.pp + ps, batch_size=bs,
+                score_flops=agg.score_flops[0],
+                kv_rw_bytes=agg.kv_rw_bytes[0])
 
         now += cost.t_total
         st.clocks[i] = now
@@ -204,8 +199,9 @@ class _SiteRuntime(LoopSite):
                     f"TP={site.tp} PP={site.pp} (site {site.name})")
             sched = dataclasses.replace(sched, kv_budget_tokens=budget)
         super().__init__(RoundRobinRouter(site.n_replicas, sched),
-                         ExecutionModel(cfg.model, self.device, site.tp,
-                                        site.pp, cfg.execmodel),
+                         cached_execution_model(cfg.model, site.device,
+                                                site.tp, site.pp,
+                                                cfg.execmodel),
                          site.pp)
         self.ci = ci_trace_signal(site.ci_trace, horizon_h)
 
@@ -223,19 +219,18 @@ class _SiteRuntime(LoopSite):
         return float(self.ci.at(t_s))
 
 
-def _site_load_signal(stages: StageLog, pm: PowerModel, n_devices: int,
+def _site_load_signal(stages: StageTrace, pm: PowerModel, n_devices: int,
                       pue: float, resolution_s: float,
                       t_end_s: float) -> Signal:
-    """The table2 Eq. 5 pipeline (``stages_to_load_signal``) padded
+    """The table2 Eq. 5 pipeline (``trace_to_load_signal``) padded
     onto the common fleet grid [0, t_end): bins outside this site's
     active span draw idle power while the fleet is still serving."""
     n_bins = max(1, int(math.ceil(t_end_s / resolution_s)))
     times = np.arange(n_bins) * resolution_s
     vals = np.full(n_bins, pm.dev.p_idle * n_devices * pue)
     if len(stages.start_s):
-        sig = stages_to_load_signal(stages.start_s, stages.dur_s,
-                                    stages.mfu, pm, n_devices=n_devices,
-                                    pue=pue, resolution_s=resolution_s)
+        sig = trace_to_load_signal(stages, pm, n_devices=n_devices,
+                                   pue=pue, resolution_s=resolution_s)
         off = int(round(sig.times[0] / resolution_s))
         n = min(len(sig.values), n_bins - off)
         if n > 0:
@@ -246,7 +241,7 @@ def _site_load_signal(stages: StageLog, pm: PowerModel, n_devices: int,
 @dataclasses.dataclass
 class SiteResult:
     site: SiteConfig
-    stages: StageLog
+    stages: StageTrace
     requests: List[Request]            # requests routed to this site
     energy: EnergyReport               # Eq. 2-3 active energy
     load: Signal                       # Eq. 5 profile (idle-filled)
@@ -374,9 +369,9 @@ def run_fleet_simulation(cfg: FleetConfig,
     results = []
     for st, log in zip(sites, stage_logs):
         pm = PowerModel(st.site.device)
-        energy = operational_energy(log.mfu, log.dur_s, pm,
-                                    n_devices=st.site.n_devices,
-                                    pue=cfg.pue)
+        energy = operational_energy_trace(log, pm,
+                                          n_devices=st.site.n_devices,
+                                          pue=cfg.pue)
         load = _site_load_signal(log, pm, st.site.n_devices, cfg.pue,
                                  cfg.resolution_s, t_end)
         solar = solar_signal(max(t_end / 3600.0, 0.02),
@@ -393,13 +388,8 @@ def run_fleet_simulation(cfg: FleetConfig,
         cos = run_cosim(load, solar, st.ci, grid_cfg)
         # stage-attributed carbon: same per-record energy convention as
         # operational_energy, weighted by the CI each stage ran under
-        if len(log.start_s):
-            stage_wh = (np.asarray(pm.power(log.mfu)) * log.dur_s / 3600.0
-                        * st.site.n_devices * cfg.pue)
-            active_g = float(np.sum(stage_wh * st.ci.at(log.start_s))
-                             / 1000.0)
-        else:
-            active_g = 0.0
+        active_g = stage_attributed_carbon(log, pm, st.site.n_devices,
+                                           cfg.pue, st.ci)
         results.append(SiteResult(
             site=st.site, stages=log, requests=st.routed, energy=energy,
             load=load, cosim=dict(cos.metrics),

@@ -41,8 +41,12 @@ class ReplicaScheduler:
         self.kv_tokens = 0
         # prefill token counts of the batch returned by the last
         # next_batch() call, aligned with its prefills list (== full
-        # prompt lengths when chunking is off)
+        # prompt lengths when chunking is off), and the per-request
+        # offsets of already-prefilled prompt tokens (nonzero only for
+        # Sarathi chunk continuations — the exec model charges their
+        # cross-chunk KV reads)
         self.last_prefill_tokens: List[int] = []
+        self.last_prefill_offsets: List[int] = []
         self._chunk_by_rid: dict = {}
 
     def add(self, req: Request):
@@ -79,10 +83,13 @@ class ReplicaScheduler:
             if prefills:
                 self.last_prefill_tokens = [r.prefill_tokens
                                             for r in prefills]
+                self.last_prefill_offsets = [r.prefill_done
+                                             for r in prefills]
                 self._chunk_by_rid = {r.rid: r.prefill_tokens
                                       for r in prefills}
                 return prefills, []
             self.last_prefill_tokens = []
+            self.last_prefill_offsets = []
             self._chunk_by_rid = {}
             decodes = [r for r in self.running
                        if r.decoded < r.decode_tokens]
@@ -102,6 +109,7 @@ class ReplicaScheduler:
         decodes = [r for r in self.running
                    if r.prefilled and r.decoded < r.decode_tokens]
         self.last_prefill_tokens = chunks
+        self.last_prefill_offsets = [r.prefill_done for r in prefills]
         self._chunk_by_rid = {r.rid: c for r, c in zip(prefills, chunks)}
         return prefills, decodes
 

@@ -14,27 +14,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.power import DeviceProfile, PowerModel, DEVICES
-from repro.sim.execmodel import ExecModelConfig, ExecutionModel
+from repro.sim.execmodel import ExecModelConfig, cached_execution_model
 from repro.sim.requests import Request, WorkloadConfig, generate
 from repro.sim.scheduler import SchedulerConfig
+from repro.sim.trace import StageTrace
 
-
-@dataclasses.dataclass
-class StageLog:
-    start_s: np.ndarray
-    dur_s: np.ndarray
-    flops_mlp: np.ndarray
-    flops_attn: np.ndarray
-    mfu: np.ndarray
-    n_prefill_tokens: np.ndarray
-    n_decode_tokens: np.ndarray
-    replica: np.ndarray
-    batch_size: np.ndarray
-
-    def total_duration(self) -> float:
-        if len(self.start_s) == 0:
-            return 0.0
-        return float((self.start_s + self.dur_s).max())
+# the stage log became the array-native StageTrace (repro.sim.trace);
+# the historical name keeps working for existing callers
+StageLog = StageTrace
 
 
 def kv_budget_tokens(model: ModelConfig, device: DeviceProfile, tp: int,
@@ -85,7 +72,7 @@ class SimConfig:
 
 @dataclasses.dataclass
 class SimResult:
-    stages: StageLog
+    stages: StageTrace
     requests: List[Request]
     cfg: SimConfig
 
@@ -134,15 +121,16 @@ def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0,
             import dataclasses as _dc
             sched_cfg = _dc.replace(sched_cfg, kv_budget_tokens=budget)
         router = RoundRobinRouter(cfg.n_replicas, sched_cfg)
-    site = LoopSite(router, ExecutionModel(cfg.model, device, cfg.tp,
-                                           cfg.pp, cfg.execmodel), cfg.pp)
+    site = LoopSite(router, cached_execution_model(cfg.model, cfg.device,
+                                                   cfg.tp, cfg.pp,
+                                                   cfg.execmodel), cfg.pp)
     drive([site], site.add, requests, max_sim_s)
     return SimResult(stages=site.stage_log(), requests=requests, cfg=cfg)
 
 
 def energy_report(res: SimResult, pue: float = 1.2):
-    """Paper Eq. 2-3 over the simulation's stage log."""
-    from repro.core.energy import operational_energy
+    """Paper Eq. 2-3 over the simulation's stage trace."""
+    from repro.core.energy import operational_energy_trace
     pm = PowerModel(res.cfg.device)
-    return operational_energy(res.stages.mfu, res.stages.dur_s, pm,
-                              n_devices=res.cfg.n_devices, pue=pue)
+    return operational_energy_trace(res.stages, pm,
+                                    n_devices=res.cfg.n_devices, pue=pue)

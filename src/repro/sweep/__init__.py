@@ -8,9 +8,10 @@ from repro.sweep.grid import (DEFAULT_GRID_CI, SCHEMA_VERSION, GridSpec,
                               model_registry, with_overrides)
 from repro.sweep.report import (flatten, format_rows, format_table, to_csv,
                                 to_json, write_outputs)
-from repro.sweep.runner import (POSTPROCESSORS, SweepRunner, SweepStats,
-                                execute_scenario, run_scenarios)
+from repro.sweep.runner import (EXECUTION_MODES, POSTPROCESSORS, SweepRunner,
+                                SweepStats, execute_scenario, run_scenarios)
 from repro.sweep.scenarios import SWEEPS, SweepDef, run_sweep
+from repro.sweep.vectorized import execute_scenario_group, group_by_trace
 
 __all__ = [
     "ResultCache", "default_cache_root",
@@ -18,7 +19,8 @@ __all__ = [
     "config_digest", "derive_seed", "model_registry", "with_overrides",
     "flatten", "format_rows", "format_table", "to_csv", "to_json",
     "write_outputs",
-    "POSTPROCESSORS", "SweepRunner", "SweepStats", "execute_scenario",
-    "run_scenarios",
+    "EXECUTION_MODES", "POSTPROCESSORS", "SweepRunner", "SweepStats",
+    "execute_scenario", "run_scenarios",
     "SWEEPS", "SweepDef", "run_sweep",
+    "execute_scenario_group", "group_by_trace",
 ]

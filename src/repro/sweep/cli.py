@@ -37,6 +37,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="override per-scenario request count")
     p.add_argument("--workers", type=int, default=1,
                    help="scenario-level process parallelism (default 1)")
+    p.add_argument("--mode", choices=("vectorized", "event_loop"),
+                   default="vectorized",
+                   help="vectorized: one event-loop run per unique "
+                        "config, shared-trace axes (pue/grid_ci/post.*) "
+                        "evaluated as stacked array passes; event_loop: "
+                        "every scenario through the loop (bit-identical "
+                        "results either way)")
     p.add_argument("--no-cache", action="store_true",
                    help="disable the on-disk result cache")
     p.add_argument("--cache-dir", type=Path, default=None,
@@ -87,7 +94,7 @@ def main(argv=None) -> int:
         try:
             records, stats, derived = run_sweep(
                 name, smoke=args.smoke, n_requests=args.n_requests,
-                workers=args.workers, cache=cache,
+                workers=args.workers, cache=cache, mode=args.mode,
                 progress=lambda msg: print(f"   {msg}"))
         except Exception as exc:           # keep sweeping, report at exit
             failed.append(name)

@@ -18,6 +18,13 @@ Axes (or ``fixed`` entries) whose path starts with ``post.`` override
 the scenario's post-processor parameters instead of the config — e.g.
 ``"post.solar_capacity_w": [0.0, 600.0]`` sweeps the microgrid co-sim's
 solar actor without touching ``SimConfig`` (the carbon-aware axes).
+
+The paths ``pue`` and ``grid_ci`` address the *scenario-level* report
+knobs (datacenter PUE, static grid carbon intensity) rather than the
+config tree. Scenarios differing only in these axes (or in ``post.*``
+parameters) share one simulation trace — the vectorized runner mode
+(``repro.sweep.vectorized``) runs the event loop once per unique
+config and evaluates such axes as stacked array passes.
 """
 from __future__ import annotations
 
@@ -40,12 +47,28 @@ from repro.sim.simulator import SimConfig
 # every config's digest even though metrics under the defaults
 # (immediate admission, no deferrable class) are numerically identical
 # to v2 — pinned by tests/test_schedule.py.
-SCHEMA_VERSION = 3
+# v4: array-native execution model — the roofline is evaluated by the
+# batched kernel (repro.sim.execmodel.stage_cost_batch) whose folded
+# constants reassociate a few float products (ulp-level timing shifts
+# everywhere), and Sarathi chunked prefill now charges cross-chunk KV
+# reads + context-offset score FLOPs (chunked scenarios change
+# materially). Vectorized vs event-loop runner modes are bit-identical
+# under v4 (tests/test_vectorized.py), so mode is NOT part of the key.
+SCHEMA_VERSION = 4
 
 # Default static grid carbon intensity for the report's carbon columns
 # (gCO2eq/kWh; CAISO-ish annual average — the paper's co-sim case study
 # uses a time-varying CAISO-North signal instead, via the cosim post).
 DEFAULT_GRID_CI = 250.0
+
+# axis paths addressing Scenario-level report knobs rather than the
+# config tree (see GridSpec docstring)
+_SCENARIO_KNOBS = ("pue", "grid_ci")
+
+
+def _is_fleet(cfg) -> bool:
+    from repro.fleet.config import FleetConfig
+    return isinstance(cfg, FleetConfig)
 
 
 def model_registry() -> Dict[str, ModelConfig]:
@@ -127,13 +150,33 @@ class Scenario:
     grid_ci: float = DEFAULT_GRID_CI
     post: Optional[str] = None            # runner post-processor name
     post_params: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # digests are lazily cached: the runner's dedup loop, the trace
+    # grouping and record assembly all consult them, and one sha256
+    # over the full config tree per consult would dominate the
+    # per-scenario cost on large vectorized grids (scenarios are
+    # treated as immutable once expanded)
+    _key: Optional[str] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _trace_key: Optional[str] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def key(self) -> str:
-        return config_digest(self.cfg, extra={
-            "pue": self.pue, "grid_ci": self.grid_ci,
-            "post": self.post, "post_params": self.post_params,
-        })
+        if self._key is None:
+            self._key = config_digest(self.cfg, extra={
+                "pue": self.pue, "grid_ci": self.grid_ci,
+                "post": self.post, "post_params": self.post_params,
+            })
+        return self._key
+
+    @property
+    def trace_key(self) -> str:
+        """Digest of the config alone — everything the simulation
+        trace depends on, nothing the report knobs touch (the
+        vectorized runner's grouping key)."""
+        if self._trace_key is None:
+            self._trace_key = config_digest(self.cfg)
+        return self._trace_key
 
 
 @dataclasses.dataclass
@@ -163,6 +206,7 @@ class GridSpec:
         for combo in itertools.product(*value_lists):
             overrides: Dict[str, object] = dict(self.fixed)
             params: Dict[str, object] = {}
+            report_only = set()    # param leaves that never touch cfg
             for key, value in zip(keys, combo):
                 parts = key.split("+")
                 values = value if len(parts) > 1 else (value,)
@@ -173,22 +217,45 @@ class GridSpec:
                 for part, v in zip(parts, values):
                     overrides[part] = v
                     # report under the leaf name ("workload.qps" -> "qps")
-                    params[part.split(".")[-1]] = _jsonable(v)
+                    leaf = part.split(".")[-1]
+                    params[leaf] = _jsonable(v)
+                    if part.startswith("post.") or part in _SCENARIO_KNOBS:
+                        report_only.add(leaf)
             if self.seed_per_scenario and "workload.seed" not in overrides:
-                overrides["workload.seed"] = derive_seed(params)
-            # "post.<key>" paths parameterize the post-processor, the
+                # report-only axes (pue/grid_ci/post.*) never influence
+                # the workload draw: scenarios differing only in them
+                # must sample identical requests (trace sharing + an
+                # unconfounded report axis)
+                seed_params = {k: v for k, v in params.items()
+                               if k not in report_only}
+                overrides["workload.seed"] = derive_seed(seed_params)
+            # "post.<key>" paths parameterize the post-processor,
+            # "pue"/"grid_ci" the scenario-level report knobs, the
             # rest resolve into the config tree
             post_params = dict(self.post_params)
+            scen_knobs = {"pue": self.pue, "grid_ci": self.grid_ci}
             cfg_overrides = {}
             for path, value in overrides.items():
                 if path.startswith("post."):
                     post_params[path[len("post."):]] = value
+                elif path in scen_knobs:
+                    scen_knobs[path] = value
+                    if hasattr(self.base, path):
+                        # FleetConfig carries its own pue field, read
+                        # by the fleet rollup — route the value there
+                        # too so a fleet pue axis keeps sweeping it
+                        cfg_overrides[path] = value
+                    elif _is_fleet(self.base):
+                        raise ValueError(
+                            f"a {path!r} axis has no effect on fleet "
+                            "scenarios (sites carry CI traces); sweep "
+                            "site ci_trace instead")
                 else:
                     cfg_overrides[path] = value
             cfg = with_overrides(self.base, cfg_overrides)
             label = ",".join(f"{k}={params[k]}" for k in params) or "base"
             scenarios.append(Scenario(
                 cfg=cfg, params=params, tag=f"{self.tag}/{label}",
-                pue=self.pue, grid_ci=self.grid_ci, post=self.post,
-                post_params=post_params))
+                pue=scen_knobs["pue"], grid_ci=scen_knobs["grid_ci"],
+                post=self.post, post_params=post_params))
         return scenarios

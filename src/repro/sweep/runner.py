@@ -8,6 +8,13 @@ the rest out over a process pool. Scenario seeds live inside the
 config (``workload.seed``), so results are bit-identical between
 serial and parallel execution and across re-runs.
 
+Execution modes: ``"vectorized"`` (default) groups grid points that
+share a simulation trace — identical config, differing only in the
+scenario-level PUE / grid-CI / post-processor axes — runs the event
+loop once per group, and evaluates the shared-trace axes as stacked
+array passes (``repro.sweep.vectorized``); bit-identical to
+``"event_loop"``, which executes every scenario through the loop.
+
 Post-processors extend a scenario with derived analyses that need the
 full ``SimResult`` (e.g. the Table 2 microgrid co-simulation); they are
 addressed by name so records stay JSON/cache-friendly.
@@ -22,8 +29,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.carbon import emissions
+from repro.core.power import DEVICES
+from repro.fleet.config import FleetConfig
 from repro.sweep.cache import ResultCache
 from repro.sweep.grid import SCHEMA_VERSION, Scenario
+
+EXECUTION_MODES = ("vectorized", "event_loop")
 
 
 # --------------------------------------------------------------------------
@@ -85,7 +97,7 @@ POSTPROCESSORS: Dict[str, Callable] = {
 def _execute_fleet_scenario(scenario: Scenario) -> dict:
     """Fleet scenarios: run the multi-site simulation and report its
     per-site + fleet-total energy/carbon columns."""
-    from repro.fleet import run_fleet_simulation
+    from repro.fleet.simulation import run_fleet_simulation
 
     if scenario.post is not None:
         raise ValueError(
@@ -112,46 +124,66 @@ def _execute_fleet_scenario(scenario: Scenario) -> dict:
     }
 
 
-def execute_scenario(scenario: Scenario) -> dict:
-    """Run one scenario to a flat, JSON-able record."""
-    from repro.core.carbon import emissions
-    from repro.core.power import DEVICES
-    from repro.fleet.config import FleetConfig
-    from repro.sim import energy_report, run_simulation
+# result-only columns interleaved into the record head; the rest of
+# shared_result_metrics() (latency percentiles) lands after carbon
+_SHARED_HEAD = ("avg_mfu", "throughput_qps", "n_stages", "avg_batch")
 
-    if isinstance(scenario.cfg, FleetConfig):
-        return _execute_fleet_scenario(scenario)
 
-    t0 = time.perf_counter()
-    res = run_simulation(scenario.cfg)
-    rep = energy_report(res, pue=scenario.pue)
-    device = DEVICES[scenario.cfg.device]
-    carbon = emissions(rep.energy_wh, rep.gpu_hours, device,
-                       ci=scenario.grid_ci)
+def shared_result_metrics(res) -> Dict[str, float]:
+    """The metric columns that depend only on the ``SimResult`` — in
+    the vectorized mode a whole trace group computes these once."""
     stages = res.stages
+    return {
+        "avg_mfu": res.avg_mfu(),
+        "throughput_qps": res.throughput_qps(),
+        "n_stages": len(stages.dur_s),
+        "avg_batch": float(np.mean(stages.batch_size))
+        if len(stages.batch_size) else 0.0,
+        **res.latency_stats(),
+    }
+
+
+def single_site_metrics(res, scenario: Scenario, rep, carbon=None,
+                        shared=None) -> Dict[str, float]:
+    """Assemble one scenario's metric columns from a (possibly shared)
+    ``SimResult`` and its Eq. 2-3 energy report. Both execution modes
+    go through this, so their records agree bit-for-bit. ``carbon``
+    and ``shared`` accept precomputed pieces (the vectorized mode's
+    stacked CI pass / per-group result metrics); None computes them
+    here."""
+    if carbon is None:
+        carbon = emissions(rep.energy_wh, rep.gpu_hours,
+                           DEVICES[scenario.cfg.device],
+                           ci=scenario.grid_ci)
+    if shared is None:
+        shared = shared_result_metrics(res)
     metrics = {
         "energy_wh": rep.energy_wh,
         "energy_kwh": rep.energy_wh / 1000.0,
         "avg_power_w": rep.avg_power_w,
         "peak_power_w": rep.peak_power_w,
-        "avg_mfu": res.avg_mfu(),
+        "avg_mfu": shared["avg_mfu"],
         "duration_s": rep.duration_s,
         "gpu_hours": rep.gpu_hours,
-        "throughput_qps": res.throughput_qps(),
-        "n_stages": len(stages.dur_s),
-        "avg_batch": float(np.mean(stages.batch_size))
-        if len(stages.batch_size) else 0.0,
+        "throughput_qps": shared["throughput_qps"],
+        "n_stages": shared["n_stages"],
+        "avg_batch": shared["avg_batch"],
         "carbon_operational_g": carbon.operational_g,
         "carbon_embodied_g": carbon.embodied_g,
         "carbon_total_g": carbon.total_g,
         "grid_ci_g_per_kwh": scenario.grid_ci,
-        **res.latency_stats(),
+        **{k: v for k, v in shared.items() if k not in _SHARED_HEAD},
     }
     if scenario.post is not None:
         if scenario.post not in POSTPROCESSORS:
             raise KeyError(f"unknown post-processor {scenario.post!r}; "
                            f"have {sorted(POSTPROCESSORS)}")
         metrics.update(POSTPROCESSORS[scenario.post](res, scenario))
+    return metrics
+
+
+def single_site_record(scenario: Scenario, metrics: Dict[str, float],
+                       t0: float, **meta) -> dict:
     return {
         "scenario": scenario.tag,
         "key": scenario.key,
@@ -163,8 +195,23 @@ def execute_scenario(scenario: Scenario) -> dict:
                  "device": scenario.cfg.device,
                  "n_devices": scenario.cfg.n_devices,
                  "pue": scenario.pue,
-                 "post": scenario.post},
+                 "post": scenario.post,
+                 **meta},
     }
+
+
+def execute_scenario(scenario: Scenario) -> dict:
+    """Run one scenario to a flat, JSON-able record (event-loop path)."""
+    from repro.sim import energy_report, run_simulation
+
+    if isinstance(scenario.cfg, FleetConfig):
+        return _execute_fleet_scenario(scenario)
+
+    t0 = time.perf_counter()
+    res = run_simulation(scenario.cfg)
+    rep = energy_report(res, pue=scenario.pue)
+    return single_site_record(scenario, single_site_metrics(res, scenario, rep),
+                              t0)
 
 
 # --------------------------------------------------------------------------
@@ -178,15 +225,26 @@ class SweepStats:
     cache_hits: int = 0
     elapsed_s: float = 0.0
     workers: int = 1
+    mode: str = "vectorized"
+    trace_groups: int = 0     # unique simulation traces actually driven
 
     def summary(self) -> str:
+        groups = (f", {self.trace_groups} trace group(s)"
+                  if self.mode == "vectorized" and self.executed else "")
         return (f"{self.total} scenarios: {self.executed} executed, "
                 f"{self.cache_hits} cache hits, "
-                f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)")
+                f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)"
+                f"{groups}")
 
 
 class SweepRunner:
     """Execute scenarios with memoization and optional process fan-out.
+
+    ``mode="vectorized"`` (default) groups uncached scenarios by their
+    config digest and drives the event loop once per unique trace,
+    fanning *groups* out over workers; ``mode="event_loop"`` executes
+    every scenario independently (the historical behavior). Both modes
+    produce bit-identical records (pinned by tests/test_vectorized.py).
 
     ``workers > 1`` uses a spawn-context process pool (fork is unsafe
     once jax has started its threadpools). ``cache=None`` disables
@@ -194,9 +252,13 @@ class SweepRunner:
     """
 
     def __init__(self, cache: Optional[ResultCache] = None,
-                 workers: int = 1):
+                 workers: int = 1, mode: str = "vectorized"):
+        if mode not in EXECUTION_MODES:
+            raise ValueError(f"unknown mode {mode!r}; have "
+                             f"{EXECUTION_MODES}")
         self.cache = cache
         self.workers = max(1, int(workers))
+        self.mode = mode
 
     @staticmethod
     def _rebind(record: dict, sc: Scenario) -> dict:
@@ -216,7 +278,8 @@ class SweepRunner:
         t0 = time.perf_counter()
         note = progress or (lambda msg: None)
         records: List[Optional[dict]] = [None] * len(scenarios)
-        stats = SweepStats(total=len(scenarios), workers=self.workers)
+        stats = SweepStats(total=len(scenarios), workers=self.workers,
+                           mode=self.mode)
 
         misses: List[int] = []          # first index per uncached key
         dup_of: Dict[str, List[int]] = {}   # key -> later same-key idxs
@@ -236,16 +299,10 @@ class SweepRunner:
 
         if misses:
             todo = [scenarios[i] for i in misses]
-            if self.workers > 1 and len(todo) > 1:
-                ctx = multiprocessing.get_context("spawn")
-                n = min(self.workers, len(todo))
-                note(f"executing {len(todo)} scenarios on {n} processes")
-                with ProcessPoolExecutor(max_workers=n,
-                                         mp_context=ctx) as pool:
-                    fresh = list(pool.map(execute_scenario, todo))
+            if self.mode == "vectorized":
+                fresh, stats.trace_groups = self._run_vectorized(todo, note)
             else:
-                note(f"executing {len(todo)} scenarios serially")
-                fresh = [execute_scenario(sc) for sc in todo]
+                fresh = self._run_event_loop(todo, note)
             for i, record in zip(misses, fresh):
                 record["meta"]["cache_hit"] = False
                 records[i] = record
@@ -258,10 +315,47 @@ class SweepRunner:
         stats.elapsed_s = time.perf_counter() - t0
         return [r for r in records if r is not None], stats
 
+    # ---- execution backends over the cache-missed scenarios ----
+
+    def _run_event_loop(self, todo: List[Scenario], note) -> List[dict]:
+        if self.workers > 1 and len(todo) > 1:
+            ctx = multiprocessing.get_context("spawn")
+            n = min(self.workers, len(todo))
+            note(f"executing {len(todo)} scenarios on {n} processes")
+            with ProcessPoolExecutor(max_workers=n, mp_context=ctx) as pool:
+                return list(pool.map(execute_scenario, todo))
+        note(f"executing {len(todo)} scenarios serially")
+        return [execute_scenario(sc) for sc in todo]
+
+    def _run_vectorized(self, todo: List[Scenario], note
+                        ) -> Tuple[List[dict], int]:
+        from repro.sweep.vectorized import (execute_scenario_group,
+                                            group_by_trace)
+        groups = group_by_trace(todo)
+        group_scs = [[todo[j] for j in g] for g in groups]
+        if self.workers > 1 and len(group_scs) > 1:
+            ctx = multiprocessing.get_context("spawn")
+            n = min(self.workers, len(group_scs))
+            note(f"executing {len(todo)} scenarios as {len(groups)} "
+                 f"trace group(s) on {n} processes")
+            with ProcessPoolExecutor(max_workers=n, mp_context=ctx) as pool:
+                per_group = list(pool.map(execute_scenario_group, group_scs))
+        else:
+            note(f"executing {len(todo)} scenarios as {len(groups)} "
+                 f"trace group(s) serially")
+            per_group = [execute_scenario_group(g) for g in group_scs]
+        fresh: List[Optional[dict]] = [None] * len(todo)
+        for idxs, recs in zip(groups, per_group):
+            for j, rec in zip(idxs, recs):
+                fresh[j] = rec
+        return fresh, len(groups)
+
 
 def run_scenarios(scenarios: Sequence[Scenario], workers: int = 1,
                   cache: Optional[ResultCache] = None,
-                  progress: Optional[Callable[[str], None]] = None
+                  progress: Optional[Callable[[str], None]] = None,
+                  mode: str = "vectorized"
                   ) -> Tuple[List[dict], SweepStats]:
     """One-call convenience wrapper around ``SweepRunner``."""
-    return SweepRunner(cache=cache, workers=workers).run(scenarios, progress)
+    return SweepRunner(cache=cache, workers=workers,
+                       mode=mode).run(scenarios, progress)

@@ -482,6 +482,34 @@ def _shift_derive(records: List[dict]) -> str:
             f"(SLO 30s, expected:unchanged+within)")
 
 
+# ---------------------------------------------------------------- perf ----
+
+def _perf_build(smoke: bool, n_requests: Optional[int] = None):
+    """Perf-trajectory grid (``benchmarks/perf_sweep.py``): ~1k
+    scenarios spanning the paper's grid-condition axes — a few
+    workload points x a dense (PUE x grid-CI) report plane. The
+    scenario-level axes share traces, so the vectorized runner drives
+    one event loop per QPS point and stacks the rest; the event-loop
+    runner simulates all ~1k, which is exactly the contrast
+    ``BENCH_sweep.json`` tracks."""
+    qps = [2.0, 4.0, 6.45, 8.0]
+    pues = [round(1.0 + 0.05 * i, 2) for i in range(16)]
+    cis = [round(25.0 + 45.0 * i, 1) for i in range(16)]
+    n = n_requests or (16 if smoke else 64)
+    return GridSpec(
+        base=PAPER_DEFAULT, tag="perf",
+        axes={"workload.qps": qps, "pue": pues, "grid_ci": cis},
+        fixed={"workload.n_requests": n, "workload.min_len": 64,
+               "workload.max_len": 256}).expand()
+
+
+def _perf_derive(records: List[dict]) -> str:
+    rows = flatten(records)
+    traces = len({(r["qps"]) for r in rows})
+    return (f"scenarios={len(rows)};unique_traces={traces};"
+            f"shared_axis_points={len(rows) // max(traces, 1)}")
+
+
 # ------------------------------------------------------------- registry ---
 
 SWEEPS: Dict[str, SweepDef] = {
@@ -508,22 +536,27 @@ SWEEPS: Dict[str, SweepDef] = {
                       "Temporal shifting: policy x forecaster x deadline "
                       "x CI trace x solar",
                       _shift_build, _shift_derive),
+    "perf": SweepDef("perf",
+                     "Perf smoke grid: QPS x PUE x grid-CI (1k scenarios, "
+                     "4 traces)",
+                     _perf_build, _perf_derive),
 }
 
 
 def run_sweep(name: str, smoke: bool = False,
               n_requests: Optional[int] = None, workers: int = 1,
-              cache=None, progress=None):
+              cache=None, progress=None, mode: str = "vectorized"):
     """Expand + execute one named sweep.
 
     Returns ``(records, stats, derived)``. ``cache`` follows
-    ``runner.SweepRunner`` semantics (None disables memoization).
+    ``runner.SweepRunner`` semantics (None disables memoization);
+    ``mode`` selects the execution backend (both are bit-identical).
     """
     from repro.sweep.runner import SweepRunner
     if name not in SWEEPS:
         raise KeyError(f"unknown sweep {name!r}; have {sorted(SWEEPS)}")
     sweep = SWEEPS[name]
     scenarios = sweep.build(smoke, n_requests=n_requests)
-    records, stats = SweepRunner(cache=cache, workers=workers).run(
-        scenarios, progress)
+    records, stats = SweepRunner(cache=cache, workers=workers,
+                                 mode=mode).run(scenarios, progress)
     return records, stats, sweep.derive(records)

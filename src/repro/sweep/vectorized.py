@@ -1,0 +1,91 @@
+"""Trace-grouped (vectorized) scenario execution.
+
+The expensive part of a scenario is driving the continuous-batching
+event loop; everything after it — Eq. 2-3 energy under a PUE, Eq. 4
+carbon under a static grid CI, the microgrid post-processors — is a
+pure array pass over the logged ``StageTrace``. Grid points whose
+*config* is identical (they differ only in the scenario-level ``pue``
+/ ``grid_ci`` axes or in ``post.*`` parameters) therefore share one
+trace: this module groups them by config digest, runs the simulation
+once per group, and evaluates the shared-trace axes stacked —
+``stacked_energy_reports`` computes per-stage power once and scales it
+across the whole PUE axis, ``emissions_batch`` sweeps the CI axis.
+
+Axes that reach into the config tree (workload, scheduler, device,
+TP/PP, exec-model calibration) genuinely diverge the trace — device
+and parallelism change stage durations, durations change admission
+timing, timing changes batch composition — so each unique config
+falls back to one event-loop run. Their *per-stage* roofline still
+evaluates through the batched kernel inside the loop.
+
+Fleet scenarios (``FleetConfig``) run their own multi-site rollup and
+pass through unchanged.
+
+Both paths assemble records through ``runner.single_site_metrics``,
+so vectorized and event-loop records are bit-identical (pinned by
+tests/test_vectorized.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+from repro.core.carbon import emissions_batch
+from repro.core.power import DEVICES, PowerModel
+from repro.fleet.config import FleetConfig
+from repro.sweep.grid import Scenario
+
+
+def group_by_trace(scenarios: Sequence[Scenario]) -> List[List[int]]:
+    """Order-preserving partition of scenario indices into groups that
+    share one simulation trace, keyed by ``Scenario.trace_key`` (the
+    config digest alone — everything the event loop's trace depends
+    on, nothing the report knobs touch)."""
+    groups: Dict[str, List[int]] = {}
+    for i, sc in enumerate(scenarios):
+        groups.setdefault(sc.trace_key, []).append(i)
+    return list(groups.values())
+
+
+def execute_scenario_group(scenarios: List[Scenario]) -> List[dict]:
+    """Execute scenarios that share one config: one event-loop run,
+    then stacked metric evaluation per scenario."""
+    from repro.core.energy import stacked_energy_reports
+    from repro.sim import run_simulation
+    from repro.sweep.runner import (_execute_fleet_scenario,
+                                    shared_result_metrics,
+                                    single_site_metrics,
+                                    single_site_record)
+
+    if isinstance(scenarios[0].cfg, FleetConfig):
+        # the fleet rollup bakes CI signals and PUE into its per-site
+        # co-sims — no shared-trace axis to stack; keep the fleet path
+        return [_execute_fleet_scenario(sc) for sc in scenarios]
+
+    t0 = time.perf_counter()
+    cfg = scenarios[0].cfg
+    res = run_simulation(cfg)
+    pm = PowerModel(cfg.device)
+    shared = shared_result_metrics(res)
+    sim_elapsed = time.perf_counter() - t0
+    # one array pass over the shared trace covers the whole PUE axis
+    reps = stacked_energy_reports(res.stages.mfu, res.stages.dur_s, pm,
+                                  n_devices=cfg.n_devices,
+                                  pues=[sc.pue for sc in scenarios])
+    # ... and one stacked Eq. 4 pass covers the grid-CI axis
+    carbons = emissions_batch([r.energy_wh for r in reps],
+                              [r.gpu_hours for r in reps],
+                              DEVICES[cfg.device],
+                              [sc.grid_ci for sc in scenarios])
+
+    records = []
+    for sc, rep, carbon in zip(scenarios, reps, carbons):
+        # elapsed_s = the (shared) sim + this record's own evaluation
+        # — the scenario's standalone cost, not a cumulative group sum
+        rec_t0 = time.perf_counter() - sim_elapsed
+        metrics = single_site_metrics(res, sc, rep, carbon=carbon,
+                                      shared=shared)
+        records.append(single_site_record(
+            sc, metrics, rec_t0, mode="vectorized",
+            trace_scenarios=len(scenarios)))
+    return records

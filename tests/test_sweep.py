@@ -108,15 +108,55 @@ def test_record_has_energy_carbon_columns_and_csv(tmp_path):
 def test_smoke_sweeps_expand_for_every_figure():
     from repro.sweep import SWEEPS
     assert set(SWEEPS) == {"fig1", "fig2", "fig3", "fig4", "fig5",
-                           "exp5", "table2", "carbon", "fleet", "shift"}
+                           "exp5", "table2", "carbon", "fleet", "shift",
+                           "perf"}
+    # perf is the runner-throughput grid: deliberately ~1k scenarios,
+    # but they collapse to a handful of unique traces
+    smoke_caps = {"shift": 18, "perf": 1024}
     for name, sweep in SWEEPS.items():
         scenarios = sweep.build(True)
         assert scenarios, name
         # smoke grids stay tiny so CI can afford every figure per push
         # (shift's policy x forecaster x trace-set grid is wider but
         # each scenario is a ~100-request fleet sim, seconds apiece)
-        assert len(scenarios) <= (18 if name == "shift" else 8), name
+        assert len(scenarios) <= smoke_caps.get(name, 8), name
         assert all(s.cfg.workload.n_requests <= 2000 for s in scenarios), name
+
+
+def test_scenario_knob_axes_route_correctly():
+    import pytest
+
+    from repro.configs.paper_models import LLAMA3_8B
+    from repro.fleet.config import FleetConfig, SiteConfig
+    from repro.sim import WorkloadConfig
+
+    # SimConfig bases: pue/grid_ci land on the Scenario, not the config
+    a, b = GridSpec(base=tiny_base(8), axes={"pue": [1.0, 1.5]}).expand()
+    assert (a.pue, b.pue) == (1.0, 1.5)
+    assert a.trace_key == b.trace_key          # shared simulation trace
+    assert a.key != b.key                      # distinct cache entries
+
+    # FleetConfig bases: the fleet rollup reads cfg.pue — a pue axis
+    # must reach it (and grid_ci, which fleets ignore, must refuse)
+    fleet = FleetConfig(
+        model=LLAMA3_8B, sites=(SiteConfig(name="s0", ci_trace="hydro"),),
+        workload=WorkloadConfig(n_requests=8, qps=4.0, min_len=64,
+                                max_len=128, seed=0))
+    fa, fb = GridSpec(base=fleet, axes={"pue": [1.0, 1.5]}).expand()
+    assert (fa.cfg.pue, fb.cfg.pue) == (1.0, 1.5)
+    with pytest.raises(ValueError):
+        GridSpec(base=fleet, axes={"grid_ci": [100.0]}).expand()
+
+
+def test_derived_seeds_ignore_report_knobs():
+    spec = GridSpec(base=tiny_base(8),
+                    axes={"workload.qps": [2.0], "pue": [1.0, 1.3]},
+                    seed_per_scenario=True)
+    a, b = spec.expand()
+    # report knobs must not confound the workload draw: same seed,
+    # same trace group across the pue axis
+    assert a.cfg.workload.seed == b.cfg.workload.seed
+    assert a.trace_key == b.trace_key
 
 
 def test_seed_lives_in_config_not_execution_order():
