@@ -19,9 +19,10 @@ RESULTS = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 
 def main() -> None:
     from benchmarks import (exp5_parallelism, exp6_fleet, exp7_shifting,
-                            fig1_qps_saturation, fig2_request_count,
-                            fig3_pd_ratio, fig4_batch_cap, fig5_qps,
-                            perf_sweep, table2_cosim)
+                            exp8_day, fig1_qps_saturation,
+                            fig2_request_count, fig3_pd_ratio,
+                            fig4_batch_cap, fig5_qps, perf_sweep,
+                            table2_cosim)
     benches = [
         ("fig1_qps_saturation", fig1_qps_saturation.run),
         ("fig2_request_count", fig2_request_count.run),
@@ -33,6 +34,7 @@ def main() -> None:
         ("exp6_fleet", exp6_fleet.run),
         ("exp7_shifting", exp7_shifting.run),
         ("perf_sweep", perf_sweep.run),
+        ("exp8_day", exp8_day.run),
     ]
     args = sys.argv[1:]
     smoke = "--smoke" in args
@@ -47,8 +49,8 @@ def main() -> None:
                    if any(n.startswith(want) for want in names)]
         if not benches:
             print(f"no benchmark matches {names!r}; have "
-                  f"fig1..fig5, exp5, exp6, exp7, table2, perf_sweep",
-                  file=sys.stderr)
+                  f"fig1..fig5, exp5, exp6, exp7, exp8, table2, "
+                  f"perf_sweep", file=sys.stderr)
             sys.exit(2)
     # smoke-scale rows go to their own subdir so they never shadow a
     # full reproduction's results under the same path

@@ -69,6 +69,14 @@ CI_TRACES = {
     "hydro-evening": dict(base=70.0, swing=20.0, seed=12,
                           day_offset_h=17.0),
     "wind": dict(base=180.0, swing=90.0, seed=13),
+    # "-night" variants start just past the 19.5 h duck-curve peak, so
+    # CI declines from sim t=0 — short-horizon deferral windows (the
+    # day-scale smoke grids) see an immediate carbon gradient to shift
+    # into without needing hours of lead-up
+    "caiso-night": dict(base=380.0, swing=120.0, seed=4,
+                        day_offset_h=20.0),
+    "coal-night": dict(base=720.0, swing=60.0, seed=11,
+                       day_offset_h=20.0),
 }
 
 # File-backed traces (real-world CI exports), registered next to the

@@ -19,8 +19,10 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.fleet.autoscale import AutoscalerConfig
 from repro.schedule.config import ScheduleConfig
 from repro.sim.execmodel import ExecModelConfig
+from repro.sim.hybrid import DayConfig
 from repro.sim.requests import WorkloadConfig
 from repro.sim.scheduler import SchedulerConfig
 
@@ -44,10 +46,21 @@ class SiteConfig:
     soc_max: float = 0.8
     scheduler: SchedulerConfig = dataclasses.field(
         default_factory=SchedulerConfig)
+    # replica autoscaling (repro.fleet.autoscale); default disabled —
+    # the active set is then fixed at n_replicas
+    autoscaler: AutoscalerConfig = dataclasses.field(
+        default_factory=AutoscalerConfig)
 
     @property
     def n_devices(self) -> int:
         return self.n_replicas * self.tp * self.pp    # Eq. 2, per site
+
+    @property
+    def max_replicas(self) -> int:
+        """Replica-list size the runtimes allocate: the autoscaler's
+        ceiling when enabled, else the fixed replica count."""
+        return (max(self.autoscaler.max_replicas, self.n_replicas)
+                if self.autoscaler.enabled else self.n_replicas)
 
 
 @dataclasses.dataclass
@@ -72,6 +85,9 @@ class FleetConfig:
     # so scenarios differing only in admission policy charge identical
     # idle carbon and stay comparable; None = size from the stage logs
     horizon_s: Optional[float] = None
+    # day-scale epoch segmentation + fluid/request hybrid evaluation
+    # (repro.fleet.day); None = the request-level simulation path
+    day: Optional[DayConfig] = None
 
     def __post_init__(self):
         self.sites = tuple(self.sites)

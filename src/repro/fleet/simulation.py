@@ -29,6 +29,7 @@ from repro.core.energy import EnergyReport, operational_energy_trace
 from repro.core.microgrid import BatteryConfig, MicrogridConfig
 from repro.core.power import DEVICES, PowerModel
 from repro.core.signals import Signal
+from repro.fleet.autoscale import ActiveSetRouter, ReplicaController
 from repro.fleet.config import FleetConfig, SiteConfig
 from repro.fleet.routing import RoundRobinRouter, make_router
 from repro.schedule import (apply_admission, class_stats,
@@ -94,6 +95,13 @@ class LoopSite:
         for r in done:
             self._outstanding_tokens -= r.prefill_tokens + r.decode_tokens
 
+    def maybe_control(self, t_s: float) -> bool:
+        """Autoscaling hook, polled by ``drive`` at processing events.
+        Sites with a ``ReplicaController`` resize their active replica
+        set here; the default site has none. Returns whether the
+        active set changed (the loop then re-selects its event)."""
+        return False
+
     def stage_log(self) -> StageTrace:
         return self.trace.build()
 
@@ -138,6 +146,8 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
             continue
 
         st = sites[s]
+        if st.maybe_control(t_event):
+            continue    # active set changed: re-select the event
         rep = st.replicas.replicas[i]
         now = st.clocks[i]
         prefills, decodes = rep.next_batch()
@@ -158,8 +168,8 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
         plens = list(rep.last_prefill_tokens)
         offs = list(rep.last_prefill_offsets)
         ctxs = [r.prefill_tokens + r.decoded for r in decodes]
-        agg = st.exec_model.aggregate(plens, ctxs, offs)
-        cost = st.exec_model.stage_cost_batch(agg).row(0)
+        cost, npt, ndec, f_score, kv_rw = st.exec_model.stage_cost_scalar(
+            plens, ctxs, offs)
 
         # one record per pipeline stage (replica-stage granularity)
         bs = len(prefills) + len(decodes)
@@ -168,11 +178,11 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
                 start_s=now + ps * cost.t_total / max(st.pp, 1),
                 dur_s=cost.t_total, flops_mlp=cost.flops_mlp,
                 flops_attn=cost.flops_attn, mfu=cost.mfu,
-                n_prefill_tokens=agg.prefill_tokens[0],
-                n_decode_tokens=agg.decode_count[0],
+                n_prefill_tokens=npt,
+                n_decode_tokens=ndec,
                 replica=i * st.pp + ps, batch_size=bs,
-                score_flops=agg.score_flops[0],
-                kv_rw_bytes=agg.kv_rw_bytes[0])
+                score_flops=f_score,
+                kv_rw_bytes=kv_rw)
 
         now += cost.t_total
         st.clocks[i] = now
@@ -198,12 +208,28 @@ class _SiteRuntime(LoopSite):
                     f"{cfg.model.name} does not fit {site.device} at "
                     f"TP={site.tp} PP={site.pp} (site {site.name})")
             sched = dataclasses.replace(sched, kv_budget_tokens=budget)
-        super().__init__(RoundRobinRouter(site.n_replicas, sched),
+        self.controller = None
+        if site.autoscaler.enabled:
+            # allocate the ceiling up front (stable replica indices /
+            # trace ids); the controller moves the active-set boundary
+            router = ActiveSetRouter(site.max_replicas, sched,
+                                     n_active=min(site.n_replicas,
+                                                  site.max_replicas))
+            self.controller = ReplicaController(site.autoscaler,
+                                                site.n_replicas)
+        else:
+            router = RoundRobinRouter(site.n_replicas, sched)
+        super().__init__(router,
                          cached_execution_model(cfg.model, site.device,
                                                 site.tp, site.pp,
                                                 cfg.execmodel),
                          site.pp)
         self.ci = ci_trace_signal(site.ci_trace, horizon_h)
+
+    def maybe_control(self, t_s: float) -> bool:
+        if self.controller is None:
+            return False
+        return self.controller.maybe_control(self, t_s)
 
     # ---- FleetRouter protocol ----
     def outstanding_tokens(self) -> int:
@@ -220,21 +246,36 @@ class _SiteRuntime(LoopSite):
 
 
 def _site_load_signal(stages: StageTrace, pm: PowerModel, n_devices: int,
-                      pue: float, resolution_s: float,
-                      t_end_s: float) -> Signal:
+                      pue: float, resolution_s: float, t_end_s: float,
+                      device_signal=None) -> Signal:
     """The table2 Eq. 5 pipeline (``trace_to_load_signal``) padded
     onto the common fleet grid [0, t_end): bins outside this site's
-    active span draw idle power while the fleet is still serving."""
+    active span draw idle power while the fleet is still serving.
+
+    ``device_signal`` — an optional ``(times, counts)`` step signal of
+    *powered* devices from a replica autoscaler — replaces the fixed
+    ``n_devices`` scale: each bin draws its per-device power times the
+    devices actually powered then (cold replicas draw nothing, warm
+    spares draw idle)."""
     n_bins = max(1, int(math.ceil(t_end_s / resolution_s)))
     times = np.arange(n_bins) * resolution_s
-    vals = np.full(n_bins, pm.dev.p_idle * n_devices * pue)
+    if device_signal is not None:
+        ts, counts = device_signal
+        idx = np.clip(np.searchsorted(ts, times, side="right") - 1,
+                      0, len(counts) - 1)
+        devices = counts[idx].astype(np.float64)
+    else:
+        devices = np.full(n_bins, float(n_devices))
+    vals = pm.dev.p_idle * devices * pue
     if len(stages.start_s):
-        sig = trace_to_load_signal(stages, pm, n_devices=n_devices,
-                                   pue=pue, resolution_s=resolution_s)
+        # per-device bin power, scaled by the live device count
+        sig = trace_to_load_signal(stages, pm, n_devices=1, pue=1.0,
+                                   resolution_s=resolution_s)
         off = int(round(sig.times[0] / resolution_s))
         n = min(len(sig.values), n_bins - off)
         if n > 0:
-            vals[off:off + n] = sig.values[:n]
+            vals[off:off + n] = (sig.values[:n] * devices[off:off + n]
+                                 * pue)
     return Signal(times, vals, interp="previous")
 
 
@@ -252,6 +293,9 @@ class SiteResult:
     # carbon that temporal/spatial scheduling actually moves, immune to
     # the Eq. 5 bin-quantization of the co-sim totals
     carbon_active_g: float = 0.0
+    # replica-autoscaler counters (repro.fleet.autoscale); empty when
+    # the site runs a fixed replica set
+    autoscale: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def carbon_operational_g(self) -> float:
@@ -308,6 +352,14 @@ class FleetResult:
             **class_stats(self.requests),
             **self.admission_stats,
         }
+        if any(s.autoscale for s in self.sites):
+            # autoscaler columns appear only when a site scales, so
+            # fixed-replica fleets keep their pre-autoscaler records
+            # bit-for-bit (schema-bump pin)
+            out["scale_ups"] = sum(s.autoscale.get("scale_ups", 0.0)
+                                   for s in self.sites)
+            out["scale_downs"] = sum(s.autoscale.get("scale_downs", 0.0)
+                                     for s in self.sites)
         for s in self.sites:
             p = s.site.name
             out[f"{p}_n_requests"] = float(len(s.requests))
@@ -372,8 +424,12 @@ def run_fleet_simulation(cfg: FleetConfig,
         energy = operational_energy_trace(log, pm,
                                           n_devices=st.site.n_devices,
                                           pue=cfg.pue)
+        dev_sig = (st.controller.device_signal(
+            t_end, st.site.tp * st.site.pp)
+            if st.controller is not None else None)
         load = _site_load_signal(log, pm, st.site.n_devices, cfg.pue,
-                                 cfg.resolution_s, t_end)
+                                 cfg.resolution_s, t_end,
+                                 device_signal=dev_sig)
         solar = solar_signal(max(t_end / 3600.0, 0.02),
                              capacity_w=st.site.solar_capacity_w,
                              seed=st.site.solar_seed,
@@ -394,7 +450,9 @@ def run_fleet_simulation(cfg: FleetConfig,
             site=st.site, stages=log, requests=st.routed, energy=energy,
             load=load, cosim=dict(cos.metrics),
             avg_ci=float(np.mean(st.ci.at(load.times))),
-            carbon_active_g=active_g))
+            carbon_active_g=active_g,
+            autoscale=(st.controller.stats()
+                       if st.controller is not None else {})))
 
     return FleetResult(cfg=cfg, sites=results, requests=requests,
                        assignments=assignments,

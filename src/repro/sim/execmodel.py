@@ -307,6 +307,65 @@ class ExecutionModel:
         batch = self.aggregate(prefill_lens, decode_ctxs, prefill_offsets)
         return self.stage_cost_batch(batch).row(0)
 
+    def stage_cost_scalar(self, prefill_lens: Sequence[int],
+                          decode_ctxs: Sequence[int],
+                          prefill_offsets: Optional[Sequence[int]] = None):
+        """One stage's cost without the length-1 array round-trip:
+        ``aggregate`` + ``stage_cost_batch().row(0)`` spend most of
+        their time wrapping four scalars into arrays and dispatching
+        elementwise kernels over them — pure overhead on the event
+        loop's hot path, where a day-scale exact epoch evaluates
+        hundreds of thousands of single stages.
+
+        Bit-identical to the batched path by construction: the batch-
+        composition reductions keep numpy's pairwise summation (same
+        expressions, ``.sum()`` method instead of the ``np.sum``
+        wrapper), and the roofline runs the same IEEE-double operation
+        sequence on Python floats. Pinned by tests.
+
+        Returns ``(StageCost, prefill_tokens, decode_count,
+        score_flops, kv_rw_bytes)`` — the cost plus the stage's
+        StageBatch aggregates as plain floats (what the trace logs).
+        """
+        plens = np.asarray(prefill_lens, np.float64)
+        ctxs = np.asarray(decode_ctxs, np.float64)
+        offs = (np.zeros_like(plens) if prefill_offsets is None
+                else np.asarray(prefill_offsets, np.float64))
+
+        npt = float(plens.sum())
+        nd = float(len(ctxs))
+        avg_ctx = np.maximum(offs + np.floor(plens / 2.0), 1.0)
+        f_score = (float((plens * self._score_per_token(avg_ctx)).sum())
+                   + float(self._score_per_token(ctxs).sum()))
+        kvpt = self.kv_bytes_per_token
+        w = self.sliding_window
+        kv_pre = (plens * kvpt + np.minimum(offs, w) * kvpt).sum()
+        kv_dec = (np.minimum(ctxs, w) * kvpt + kvpt).sum()
+        kv_rw = float(kv_pre + kv_dec)
+
+        p = self._params
+        tokens = npt + nd
+        if tokens > 0:
+            f_mlp = tokens * p.fpt_mlp
+            f_attn = tokens * p.fpt_proj + f_score
+            flops_st = (f_mlp + f_attn) / p.pp
+            mem_st = (p.weight_bytes + kv_rw
+                      + tokens * p.act_bytes_per_token) / p.pp
+            eff = p.eff_max * tokens / (tokens + p.eff_half_tokens)
+            t_comp = flops_st / (eff * p.peak_chips)
+            t_mem = mem_st / p.hbm_chips
+            t_coll = tokens * p.coll_s_per_token
+            t = (max(t_comp, t_mem) + p.coll_scale * t_coll
+                 + p.overhead_s)
+            cost = StageCost(
+                t_total=t, t_compute=t_comp, t_memory=t_mem,
+                t_collective=t_coll, flops_mlp=f_mlp / p.pp,
+                flops_attn=f_attn / p.pp,
+                mfu=flops_st / (p.peak_chips * t))
+        else:
+            cost = StageCost(0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        return cost, npt, nd, f_score, kv_rw
+
 
 @functools.lru_cache(maxsize=512)
 def cached_execution_model(model: ModelConfig, device_name: str,

@@ -69,6 +69,17 @@ class WorkloadConfig:
     deferrable_frac: float = 0.0
     deferrable_deadline_s: float = 3600.0
     interactive_slo_s: float = 30.0
+    # day-scale rate modulation (repro.workloads): a diurnal envelope
+    # over the mean qps plus an MMPP-style burst overlay. The defaults
+    # (envelope "none", gain 1.0) keep the legacy constant-rate stream
+    # bit-for-bit, pinned by tests/test_workloads.py
+    envelope: str = "none"            # none | sinusoidal | diurnal
+    envelope_amplitude: float = 0.35
+    envelope_period_h: float = 24.0
+    envelope_phase_h: float = 0.0
+    burst_gain: float = 1.0           # rate multiplier during bursts
+    burst_mean_s: float = 0.0         # mean burst duration (0 = off)
+    burst_idle_mean_s: float = 3600.0  # mean gap between bursts
 
 
 def zipf_lengths(rng, n: int, theta: float, lo: int, hi: int) -> np.ndarray:
@@ -79,39 +90,8 @@ def zipf_lengths(rng, n: int, theta: float, lo: int, hi: int) -> np.ndarray:
 
 
 def generate(cfg: WorkloadConfig) -> List[Request]:
-    rng = np.random.default_rng(cfg.seed)
-    if cfg.arrival == "poisson":
-        gaps = rng.exponential(1.0 / max(cfg.qps, 1e-9), cfg.n_requests)
-    else:
-        gaps = np.full(cfg.n_requests, 1.0 / max(cfg.qps, 1e-9))
-    arrivals = np.cumsum(gaps)
-    if cfg.length_dist == "zipf":
-        lengths = zipf_lengths(rng, cfg.n_requests, cfg.zipf_theta,
-                               cfg.min_len, cfg.max_len)
-    else:
-        lengths = np.full(cfg.n_requests, cfg.max_len, int)
-    # split each request's tokens by the P:D ratio
-    pf = cfg.pd_ratio / (cfg.pd_ratio + 1.0)
-    prefills = np.maximum(1, np.round(lengths * pf)).astype(int)
-    decodes = np.maximum(1, lengths - prefills).astype(int)
-    # class tags draw AFTER the arrival/length streams: frac=0 consumes
-    # no randomness and reproduces the pre-class workload bit-for-bit
-    if cfg.deferrable_frac > 0.0:
-        deferrable = rng.random(cfg.n_requests) < cfg.deferrable_frac
-    else:
-        deferrable = np.zeros(cfg.n_requests, bool)
-    out = []
-    for i in range(cfg.n_requests):
-        if deferrable[i]:
-            out.append(Request(
-                rid=i, arrival_s=float(arrivals[i]),
-                prefill_tokens=int(prefills[i]),
-                decode_tokens=int(decodes[i]), klass=DEFERRABLE,
-                deadline_s=float(arrivals[i]) + cfg.deferrable_deadline_s))
-        else:
-            out.append(Request(
-                rid=i, arrival_s=float(arrivals[i]),
-                prefill_tokens=int(prefills[i]),
-                decode_tokens=int(decodes[i]), klass=INTERACTIVE,
-                slo_s=cfg.interactive_slo_s))
-    return out
+    """Materialized request list; arrival placement, length draws and
+    class tags live in ``repro.workloads.stream.generate_stream`` (the
+    array-native form day-scale simulations consume directly)."""
+    from repro.workloads.stream import generate_stream
+    return generate_stream(cfg).to_requests()

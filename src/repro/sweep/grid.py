@@ -54,7 +54,12 @@ from repro.sim.simulator import SimConfig
 # reads + context-offset score FLOPs (chunked scenarios change
 # materially). Vectorized vs event-loop runner modes are bit-identical
 # under v4 (tests/test_vectorized.py), so mode is NOT part of the key.
-SCHEMA_VERSION = 4
+# v5: config schema extension for day-scale workloads (envelope/burst
+# fields on WorkloadConfig, AutoscalerConfig on SiteConfig, DayConfig
+# on FleetConfig) changes every digest; metrics under the defaults
+# (no envelope, autoscaler disabled, day=None) are bit-identical to
+# v4 — pinned by tests/test_day.py golden records.
+SCHEMA_VERSION = 5
 
 # Default static grid carbon intensity for the report's carbon columns
 # (gCO2eq/kWh; CAISO-ish annual average — the paper's co-sim case study

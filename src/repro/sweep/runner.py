@@ -96,7 +96,11 @@ POSTPROCESSORS: Dict[str, Callable] = {
 
 def _execute_fleet_scenario(scenario: Scenario) -> dict:
     """Fleet scenarios: run the multi-site simulation and report its
-    per-site + fleet-total energy/carbon columns."""
+    per-site + fleet-total energy/carbon columns. Configs carrying a
+    ``DayConfig`` dispatch to the epoch-segmented day driver
+    (``repro.fleet.day``) — fluid/request hybrid or exact per
+    ``day.mode``."""
+    from repro.fleet.day import run_fleet_day
     from repro.fleet.simulation import run_fleet_simulation
 
     if scenario.post is not None:
@@ -104,23 +108,29 @@ def _execute_fleet_scenario(scenario: Scenario) -> dict:
             "fleet scenarios run their own per-site microgrid co-sim; "
             f"post-processor {scenario.post!r} is not supported")
     t0 = time.perf_counter()
-    res = run_fleet_simulation(scenario.cfg)
+    if scenario.cfg.day is not None:
+        res = run_fleet_day(scenario.cfg)
+    else:
+        res = run_fleet_simulation(scenario.cfg)
     cfg = scenario.cfg
+    meta = {"schema": SCHEMA_VERSION,
+            "elapsed_s": time.perf_counter() - t0,
+            "model": cfg.model.name,
+            "device": cfg.device,
+            "n_devices": cfg.n_devices,
+            "pue": cfg.pue,
+            "post": None,
+            "router": cfg.router,
+            "policy": cfg.schedule.policy,
+            "forecaster": cfg.schedule.forecaster}
+    if cfg.day is not None:
+        meta["day_mode"] = cfg.day.mode
     return {
         "scenario": scenario.tag,
         "key": scenario.key,
         "params": dict(scenario.params),
         "metrics": res.summary(),
-        "meta": {"schema": SCHEMA_VERSION,
-                 "elapsed_s": time.perf_counter() - t0,
-                 "model": cfg.model.name,
-                 "device": cfg.device,
-                 "n_devices": cfg.n_devices,
-                 "pue": cfg.pue,
-                 "post": None,
-                 "router": cfg.router,
-                 "policy": cfg.schedule.policy,
-                 "forecaster": cfg.schedule.forecaster},
+        "meta": meta,
     }
 
 

@@ -482,6 +482,179 @@ def _shift_derive(records: List[dict]) -> str:
             f"(SLO 30s, expected:unchanged+within)")
 
 
+# ----------------------------------------------------------------- day ----
+
+#: tolerance for fluid-epoch and whole-day metric agreement between the
+#: hybrid and event_loop day modes (relative) — the acceptance bound
+#: the day-smoke CI job asserts
+DAY_FLUID_RTOL = 0.01
+
+#: per-epoch columns compared across day modes. Tail quantiles are
+#: deliberately absent: a ~100-request pilot's p99 is order-statistic-
+#: limited (the ttft tail sits on discrete queueing modes, so the 99th
+#: percentile of a small sample jumps between modes), so the p99
+#: agreement bound is asserted on planned-exact epochs (bit-for-bit,
+#: below) and on the day-level weighted percentile (_DAY_TOTAL_COLS),
+#: where the aggregated sample mass smooths the mode boundary.
+_DAY_COMPARE_COLS = ("energy_wh", "carbon_g", "n")
+_DAY_EXACT_COLS = _DAY_COMPARE_COLS + ("ttft_p99_s",)
+_DAY_TOTAL_COLS = ("energy_wh", "carbon_operational_g", "ttft_p99_s",
+                   "e2e_p99_s", "n_requests")
+
+
+def _day_build(smoke: bool, n_requests: Optional[int] = None):
+    """Day-scale fluid/request hybrid (repro.fleet.day): a diurnal +
+    bursty arrival stream over a two-site fleet with carbon-aware
+    deferral, run under both day modes — ``hybrid`` (fluid epochs with
+    exact transients) and ``event_loop`` (every epoch exact) — with
+    and without the replica autoscaler. The smoke grid is what the
+    day-smoke CI job compares: planned-exact epochs bit-for-bit,
+    fluid epochs within ``DAY_FLUID_RTOL``."""
+    from repro.configs.paper_models import LLAMA3_8B
+    from repro.fleet.autoscale import AutoscalerConfig
+    from repro.fleet.config import FleetConfig, SiteConfig
+    from repro.schedule.config import ScheduleConfig
+    from repro.sim.hybrid import DayConfig
+    from repro.sim.requests import WorkloadConfig
+    from repro.sim.scheduler import SchedulerConfig
+
+    span = 3600.0 if smoke else 24 * 3600.0
+    n = n_requests or (9000 if smoke else 400_000)
+    epoch_s = 300.0 if smoke else 900.0
+    # full-scale event_loop would step every request (minutes of wall
+    # clock); the full sweep keeps the hybrid rows only — the smoke
+    # grid carries the cross-mode agreement pin
+    modes = ["hybrid", "event_loop"] if smoke else ["hybrid"]
+    # fixed request length: the fluid pilot's p99 must estimate the
+    # exact epoch's p99 within DAY_FLUID_RTOL, which needs a latency
+    # distribution whose tail is set by queueing, not by length-draw
+    # sampling noise in a ~100-request pilot
+    wl = WorkloadConfig(
+        n_requests=n, qps=n / span, min_len=192, max_len=192, seed=0,
+        envelope="sinusoidal", envelope_amplitude=0.3,
+        envelope_period_h=span / 3600.0,
+        burst_gain=2.5, burst_mean_s=span / 15.0,
+        burst_idle_mean_s=span / 2.5,
+        deferrable_frac=0.3, deferrable_deadline_s=span,
+        interactive_slo_s=30.0)
+    scenarios = []
+    for autoscale in (0, 1):
+        # tokens_per_s is the planner's capacity estimate, pitched so
+        # the diurnal swing crosses the scale-up threshold (util ~0.5
+        # at the trough, ~0.9 at the peak, >1 inside bursts)
+        asc = AutoscalerConfig(
+            enabled=bool(autoscale), min_replicas=1, max_replicas=3,
+            target_util=0.6, scale_up_latency_s=epoch_s / 5.0,
+            warm_spares=1, tokens_per_s=160.0 * n / 4000.0 / (span / 3600.0),
+            ci_scale_down_g=0.0)
+        sites = tuple(
+            SiteConfig(name=f"s{i}-{trace}", ci_trace=trace,
+                       autoscaler=asc,
+                       scheduler=SchedulerConfig(batch_cap=64))
+            for i, trace in enumerate(("caiso-night", "coal-night")))
+        for mode in modes:
+            cfg = FleetConfig(
+                model=LLAMA3_8B, sites=sites, workload=wl,
+                router="round_robin",
+                schedule=ScheduleConfig(policy="forecast_window",
+                                        forecaster="oracle",
+                                        policy_params={"margin": 0.01}),
+                # util_threshold below the default 0.85: the fluid
+                # pilot's p99 only estimates the exact epoch's within
+                # DAY_FLUID_RTOL when the tail is service-time- rather
+                # than queueing-dominated, so epochs the capacity
+                # estimate puts past ~60% utilization run exact
+                day=DayConfig(mode=mode, epoch_s=epoch_s,
+                              pilot_requests=128 if smoke else 256,
+                              warmup_requests=32 if smoke else 64,
+                              util_threshold=0.6))
+            params = {"mode": mode, "autoscale": autoscale}
+            label = ",".join(f"{k}={v}" for k, v in params.items())
+            scenarios.append(Scenario(cfg=cfg, params=params,
+                                      tag=f"day/{label}", pue=cfg.pue))
+    return scenarios
+
+
+def day_agreement(records: List[dict]) -> Dict[str, float]:
+    """Hybrid-vs-event_loop agreement stats over paired day records.
+
+    Pairs records on the non-mode params and compares per-epoch fleet
+    columns: epochs both modes planned fully exact must match
+    bit-for-bit (``exact_max_rel`` stays 0.0), fluid epochs and whole-
+    day totals within ``DAY_FLUID_RTOL``. Also checks the two modes
+    planned identical epochs (``plans_match``) and reports the hybrid
+    speedup. This is what tests/test_day.py and the day-smoke CI job
+    assert on."""
+    by_pair: Dict[tuple, Dict[str, dict]] = {}
+    for r in records:
+        key = tuple(sorted((k, v) for k, v in r["params"].items()
+                           if k != "mode"))
+        by_pair.setdefault(key, {})[r["params"]["mode"]] = r
+    out = {"n_pairs": 0.0, "plans_match": 1.0, "exact_max_rel": 0.0,
+           "fluid_max_rel": 0.0, "total_max_rel": 0.0,
+           "n_exact_epochs": 0.0, "n_fluid_epochs": 0.0,
+           "speedup": 0.0, "sim_fraction": 1.0}
+    speedups = []
+    for pair in by_pair.values():
+        h, x = pair.get("hybrid"), pair.get("event_loop")
+        if not (h and x):
+            continue
+        hm, xm = h["metrics"], x["metrics"]
+        out["n_pairs"] += 1
+        if hm["n_epochs"] != xm["n_epochs"]:
+            out["plans_match"] = 0.0
+            continue
+        for e in range(int(hm["n_epochs"])):
+            tag = f"e{e:03d}"
+            if hm[f"{tag}_exact"] != xm[f"{tag}_exact"]:
+                out["plans_match"] = 0.0
+            fully_exact = hm[f"{tag}_exact"] == 1.0
+            cols = _DAY_EXACT_COLS if fully_exact else _DAY_COMPARE_COLS
+            for col in cols:
+                a, b = hm[f"{tag}_{col}"], xm[f"{tag}_{col}"]
+                rel = abs(a - b) / max(abs(a), abs(b), 1e-12)
+                bucket = ("exact_max_rel" if fully_exact
+                          else "fluid_max_rel")
+                out[bucket] = max(out[bucket], rel)
+            if fully_exact:
+                out["n_exact_epochs"] += 1
+            else:
+                out["n_fluid_epochs"] += 1
+        for col in _DAY_TOTAL_COLS:
+            rel = (abs(hm[col] - xm[col])
+                   / max(abs(hm[col]), abs(xm[col]), 1e-12))
+            out["total_max_rel"] = max(out["total_max_rel"], rel)
+        speedups.append(x["meta"]["elapsed_s"]
+                        / max(h["meta"]["elapsed_s"], 1e-9))
+        out["sim_fraction"] = min(out["sim_fraction"],
+                                  hm["sim_fraction"])
+    if speedups:
+        out["speedup"] = float(np.mean(speedups))
+    return out
+
+
+def _day_derive(records: List[dict]) -> str:
+    agree = day_agreement(records)
+    if not agree["n_pairs"]:
+        h = [r["metrics"] for r in records
+             if r["params"]["mode"] == "hybrid"]
+        if not h:
+            return "no day records"
+        return (f"hybrid_only:n={sum(m['n_requests'] for m in h):.0f};"
+                f"sim_fraction={min(m['sim_fraction'] for m in h):.3f};"
+                f"exact_epochs={sum(m['n_exact_epochs'] for m in h):.0f}"
+                f"/{sum(m['n_epochs'] for m in h):.0f}")
+    return (f"pairs={agree['n_pairs']:.0f};"
+            f"plans_match={bool(agree['plans_match'])}(expected:True);"
+            f"exact_bitwise={agree['exact_max_rel'] == 0.0}"
+            f"(expected:True);"
+            f"fluid_max_rel={agree['fluid_max_rel']:.2e}"
+            f"(tol:{DAY_FLUID_RTOL});"
+            f"total_max_rel={agree['total_max_rel']:.2e};"
+            f"sim_fraction={agree['sim_fraction']:.3f};"
+            f"hybrid_speedup={agree['speedup']:.1f}x")
+
+
 # ---------------------------------------------------------------- perf ----
 
 def _perf_build(smoke: bool, n_requests: Optional[int] = None):
@@ -536,6 +709,10 @@ SWEEPS: Dict[str, SweepDef] = {
                       "Temporal shifting: policy x forecaster x deadline "
                       "x CI trace x solar",
                       _shift_build, _shift_derive),
+    "day": SweepDef("day",
+                    "Day-scale hybrid: diurnal+burst stream, fluid vs "
+                    "exact day modes, autoscaler on/off",
+                    _day_build, _day_derive),
     "perf": SweepDef("perf",
                      "Perf smoke grid: QPS x PUE x grid-CI (1k scenarios, "
                      "4 traces)",

@@ -1,0 +1,12 @@
+"""Day-scale workload generation: diurnal rate envelopes, MMPP burst
+overlays, and array-native arrival streams (see ``repro.workloads.
+stream`` / ``repro.workloads.envelope``)."""
+from repro.workloads.envelope import (ENVELOPES, BurstOverlay,
+                                      burst_overlay, cumulative_rate,
+                                      envelope_shape, rate_on_grid)
+from repro.workloads.stream import ArrivalStream, generate_stream
+
+__all__ = [
+    "ENVELOPES", "BurstOverlay", "burst_overlay", "cumulative_rate",
+    "envelope_shape", "rate_on_grid", "ArrivalStream", "generate_stream",
+]

@@ -1,0 +1,256 @@
+"""Fluid/request hybrid day simulation (repro.sim.hybrid +
+repro.fleet.day): cross-mode agreement, fluid==exact degeneration,
+autoscale planning, and the schema-5 golden record pin.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.paper_models import LLAMA3_8B
+from repro.fleet.autoscale import AutoscalerConfig, plan_replicas
+from repro.fleet.config import FleetConfig, SiteConfig
+from repro.fleet.day import run_fleet_day
+from repro.sim.hybrid import (DayConfig, Epoch, epoch_bounds,
+                              evaluate_epoch, plan_epochs)
+from repro.sim.requests import WorkloadConfig
+from repro.sim.scheduler import SchedulerConfig
+from repro.sim.trace import StageTrace
+from repro.sweep import SWEEPS, execute_scenario
+from repro.sweep.scenarios import DAY_FLUID_RTOL, day_agreement
+from repro.workloads import generate_stream
+
+from _hypothesis_support import given, settings, st
+
+
+def day_cfg(mode, n=3000, span=1800.0, **day_kw):
+    wl = WorkloadConfig(
+        n_requests=n, qps=n / span, min_len=192, max_len=192, seed=0,
+        envelope="sinusoidal", envelope_amplitude=0.3,
+        envelope_period_h=span / 3600.0, burst_gain=2.5,
+        burst_mean_s=span / 15.0, burst_idle_mean_s=span / 2.5)
+    return FleetConfig(
+        model=LLAMA3_8B,
+        sites=(SiteConfig(name="s0", ci_trace="caiso-night",
+                          scheduler=SchedulerConfig(batch_cap=64)),),
+        workload=wl, router="round_robin",
+        day=DayConfig(mode=mode, epoch_s=300.0, pilot_requests=128,
+                      warmup_requests=32, util_threshold=0.6, **day_kw))
+
+
+# ---------------------------------------------- cross-mode agreement ----
+
+def test_hybrid_agrees_with_event_loop_day():
+    """The day-smoke acceptance, at test scale: identical epoch plans,
+    planned-exact epochs bit-for-bit, fluid epochs and day totals
+    within DAY_FLUID_RTOL — via the same ``day_agreement`` the CI job
+    asserts on."""
+    records = []
+    for mode in ("hybrid", "event_loop"):
+        m = run_fleet_day(day_cfg(mode)).summary()
+        records.append({"params": {"mode": mode},
+                        "metrics": m, "meta": {"elapsed_s": 1.0}})
+    agree = day_agreement(records)
+    assert agree["n_pairs"] == 1
+    assert agree["plans_match"] == 1.0
+    assert agree["exact_max_rel"] == 0.0          # bit-for-bit
+    assert agree["fluid_max_rel"] < DAY_FLUID_RTOL
+    assert agree["total_max_rel"] < DAY_FLUID_RTOL
+    assert agree["n_exact_epochs"] >= 1           # bursts present
+    assert agree["n_fluid_epochs"] >= 1
+
+
+def test_day_sweep_smoke_records_agree():
+    """The actual day sweep scenarios (what CI runs) pair up and pass
+    the agreement gate at reduced request count."""
+    scenarios = [s for s in SWEEPS["day"].build(True, n_requests=4000)
+                 if s.params["autoscale"] == 0]
+    records = [execute_scenario(s) for s in scenarios]
+    agree = day_agreement(records)
+    assert agree["n_pairs"] == 1
+    assert agree["plans_match"] == 1.0
+    assert agree["exact_max_rel"] == 0.0
+    assert agree["fluid_max_rel"] < DAY_FLUID_RTOL
+    assert agree["total_max_rel"] < DAY_FLUID_RTOL
+
+
+# ---------------------------------------------- fluid == exact ----
+
+def _steady_cfg(mode, seed=0, pilot=4000):
+    """A transient-free day: flat envelope, no bursts, no deferral —
+    every epoch plans fluid, and a pilot budget >= the per-epoch count
+    makes the fluid evaluation degenerate to the exact run."""
+    wl = WorkloadConfig(n_requests=1500, qps=1.0, min_len=128,
+                        max_len=128, seed=seed)
+    return FleetConfig(
+        model=LLAMA3_8B,
+        sites=(SiteConfig(name="s0", ci_trace="caiso",
+                          scheduler=SchedulerConfig(batch_cap=32)),),
+        workload=wl, router="round_robin",
+        day=DayConfig(mode=mode, epoch_s=300.0, pilot_requests=pilot,
+                      warmup_requests=0))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_fluid_equals_exact_without_transients(seed):
+    """On windows with no transients and full pilot coverage the
+    hybrid mode IS the event loop: summaries match bit-for-bit."""
+    hyb = run_fleet_day(_steady_cfg("hybrid", seed)).summary()
+    exa = run_fleet_day(_steady_cfg("event_loop", seed)).summary()
+    assert hyb.keys() == exa.keys()
+    for k in hyb:
+        assert hyb[k] == exa[k], k
+
+
+def test_fluid_equals_exact_without_transients_example():
+    hyb = run_fleet_day(_steady_cfg("hybrid")).summary()
+    exa = run_fleet_day(_steady_cfg("event_loop")).summary()
+    assert hyb["sim_fraction"] == 1.0     # degenerate: everything ran
+    for k in hyb:
+        assert hyb[k] == exa[k], k
+
+
+# ---------------------------------------------- epoch planning ----
+
+def test_plan_epochs_marks_transients():
+    """Burst/ramp/drain/saturation classification from the stream
+    alone — identical plans whichever mode later evaluates them."""
+    wl = WorkloadConfig(n_requests=4000, qps=4000 / 3600.0, min_len=192,
+                        max_len=192, seed=0, envelope="sinusoidal",
+                        envelope_amplitude=0.4, envelope_period_h=1.0,
+                        burst_gain=3.0, burst_mean_s=240.0,
+                        burst_idle_mean_s=1200.0)
+    stream = generate_stream(wl).sorted_by_ready()
+    bounds = epoch_bounds(float(stream.ready_s[-1]), 300.0)
+    day = DayConfig(epoch_s=300.0, util_threshold=0.6)
+    plan_a = plan_epochs(stream, bounds, day, tokens_per_s=700.0,
+                         replica_plan=np.ones(len(bounds) - 1, int))
+    plan_b = plan_epochs(stream, bounds, day, tokens_per_s=700.0,
+                         replica_plan=np.ones(len(bounds) - 1, int))
+    assert [dataclasses.asdict(e) for e in plan_a] == \
+           [dataclasses.asdict(e) for e in plan_b]
+    reasons = {e.reason for e in plan_a}
+    assert "steady" in reasons
+    assert reasons & {"burst", "ramp", "saturation"}
+    # replica-plan changes mark the epoch transient
+    rp = np.ones(len(bounds) - 1, int)
+    rp[2:] = 2
+    plan_c = plan_epochs(stream, bounds, day, tokens_per_s=700.0,
+                         replica_plan=rp)
+    assert plan_c[2].reason == "autoscale" and plan_c[2].planned == "exact"
+
+
+def test_evaluate_epoch_extends_pilot_past_release_clump():
+    """A sub-threshold deferral clump (hundreds of rows at one ready
+    instant) must not silently degrade the fluid epoch to a full exact
+    run — the pilot extends past the clump instead."""
+    n, t0, t1 = 3000, 0.0, 600.0
+    clump = 500                        # > pilot budget, < drain mass
+    ready = np.concatenate([np.full(clump, 1.0),
+                            np.linspace(2.0, t1 - 1.0, n - clump)])
+    wl = WorkloadConfig(n_requests=n, qps=n / t1, min_len=64, max_len=64)
+    from repro.workloads.stream import ArrivalStream
+    stream = ArrivalStream(
+        cfg=wl, rid=np.arange(n, dtype=np.int64), arrival_s=ready.copy(),
+        prefill_tokens=np.full(n, 32, np.int64),
+        decode_tokens=np.full(n, 32, np.int64),
+        deferrable=np.zeros(n, bool), ready_s=ready)
+    epoch = Epoch(index=0, t0=t0, t1=t1, i0=0, i1=n)
+    day = DayConfig(pilot_requests=128, warmup_requests=32)
+
+    calls = []
+
+    def run_window(ep, lo, hi):
+        calls.append((lo, hi))
+        rows = stream.to_requests(lo, hi)
+        for r in rows:
+            r.t_first_token = r.ready_s + 0.01
+            r.t_done = r.ready_s + 0.05
+        cols = {f.name: np.zeros(hi - lo) for f in
+                dataclasses.fields(StageTrace)}
+        cols["start_s"] = stream.ready_s[lo:hi].astype(np.float64)
+        cols["dur_s"] = np.full(hi - lo, 0.01)
+        return StageTrace(**cols), rows
+
+    ev = evaluate_epoch(epoch, stream, day, run_window)
+    assert ev.executed == "fluid"
+    # pilot extended past the clump, but nowhere near the full epoch
+    assert clump < ev.n_simulated < n
+    assert calls == [(0, ev.n_simulated)]
+    assert ev.n_requests == n
+    assert ev.weight > 1.0
+
+
+# ---------------------------------------------- autoscale plan ----
+
+def test_plan_replicas_scales_with_demand():
+    cfg = AutoscalerConfig(enabled=True, min_replicas=1, max_replicas=4,
+                           target_util=0.5, warm_spares=1,
+                           tokens_per_s=1000.0, ci_scale_down_g=0.0)
+    util1 = np.array([0.3, 0.3, 1.2, 1.2, 0.3, 0.3])
+    ci = np.full(6, 400.0)
+    active, warm, stats = plan_replicas(cfg, util1, ci, n_initial=1)
+    assert active.tolist() == [1, 1, 3, 3, 2, 1]   # eager up, 1-step down
+    assert stats["scale_ups"] == 2.0
+    assert stats["scale_downs"] == 2.0
+    assert warm.max() <= cfg.warm_spares
+    # carbon-aware scale-down: clean grid hours keep spares active
+    clean = np.full(6, 50.0)
+    cfg2 = dataclasses.replace(cfg, ci_scale_down_g=100.0)
+    active2, _, stats2 = plan_replicas(cfg2, util1, clean, n_initial=1)
+    assert stats2["scale_downs"] == 0.0
+    assert active2[-1] == 3                        # never shrank
+
+
+def test_day_autoscaler_tracks_diurnal_swing():
+    """End-to-end: the autoscaled day scales up into the peak and back
+    down, and autoscale epochs run exact in hybrid mode."""
+    cfg = day_cfg("hybrid")
+    asc = AutoscalerConfig(
+        enabled=True, min_replicas=1, max_replicas=3, target_util=0.6,
+        scale_up_latency_s=60.0, warm_spares=1,
+        tokens_per_s=160.0 * 3000 / 4000.0 / 0.5, ci_scale_down_g=0.0)
+    site = dataclasses.replace(cfg.sites[0], autoscaler=asc)
+    cfg = dataclasses.replace(cfg, sites=(site,))
+    m = run_fleet_day(cfg).summary()
+    assert m["scale_ups"] >= 1 and m["scale_downs"] >= 1
+    assert m["replica_peak"] >= 2
+    assert m["n_exact_autoscale"] >= 1
+
+
+# ---------------------------------------------- schema-5 golden pin ----
+
+#: fig1's qps=6.45 smoke scenario under cache schema 5 — the defaults
+#: migration (SCHEMA_VERSION 4 -> 5) is metric-preserving, so these
+#: values are pinned bit-for-bit; any drift means cached and fresh
+#: sweep results have silently diverged
+GOLDEN_FIG1_QPS645 = {
+    "energy_wh": 1.4322530783827812,
+    "energy_kwh": 0.0014322530783827813,
+    "avg_power_w": 293.5191164933444,
+    "peak_power_w": 400.0,
+    "avg_mfu": 0.3040923303275911,
+    "duration_s": 14.638771356637594,
+    "gpu_hours": 0.004066325376843776,
+    "throughput_qps": 3.255520259822209,
+    "n_stages": 310,
+    "avg_batch": 13.716129032258065,
+    "carbon_operational_g": 0.3580632695956953,
+    "carbon_embodied_g": 0.01392577183850608,
+    "carbon_total_g": 0.37198904143420136,
+    "grid_ci_g_per_kwh": 250.0,
+    "ttft_p50_s": 0.9966152897386282,
+    "ttft_p99_s": 3.055099094040332,
+    "e2e_p50_s": 6.7863183083521825,
+    "e2e_p99_s": 11.298379396552983,
+}
+
+
+def test_schema5_fig1_golden_record_bitwise():
+    from repro.sweep import SCHEMA_VERSION
+    assert SCHEMA_VERSION == 5
+    scenario = SWEEPS["fig1"].build(True)[1]
+    assert scenario.params["qps"] == 6.45
+    metrics = execute_scenario(scenario)["metrics"]
+    for key, want in GOLDEN_FIG1_QPS645.items():
+        assert metrics[key] == want, (key, metrics[key], want)

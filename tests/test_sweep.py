@@ -109,10 +109,13 @@ def test_smoke_sweeps_expand_for_every_figure():
     from repro.sweep import SWEEPS
     assert set(SWEEPS) == {"fig1", "fig2", "fig3", "fig4", "fig5",
                            "exp5", "table2", "carbon", "fleet", "shift",
-                           "perf"}
+                           "perf", "day"}
     # perf is the runner-throughput grid: deliberately ~1k scenarios,
-    # but they collapse to a handful of unique traces
+    # but they collapse to a handful of unique traces; day's smoke is
+    # four whole-day hybrid/event_loop runs over an array-native
+    # stream, so its request count is epoch-planned, not event-stepped
     smoke_caps = {"shift": 18, "perf": 1024}
+    request_caps = {"day": 10_000}
     for name, sweep in SWEEPS.items():
         scenarios = sweep.build(True)
         assert scenarios, name
@@ -120,7 +123,9 @@ def test_smoke_sweeps_expand_for_every_figure():
         # (shift's policy x forecaster x trace-set grid is wider but
         # each scenario is a ~100-request fleet sim, seconds apiece)
         assert len(scenarios) <= smoke_caps.get(name, 8), name
-        assert all(s.cfg.workload.n_requests <= 2000 for s in scenarios), name
+        cap = request_caps.get(name, 2000)
+        assert all(s.cfg.workload.n_requests <= cap
+                   for s in scenarios), name
 
 
 def test_scenario_knob_axes_route_correctly():

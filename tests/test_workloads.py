@@ -1,0 +1,176 @@
+"""repro.workloads: envelopes, burst overlays, arrival streams.
+
+Property tests (hypothesis, skipped gracefully when unavailable) pin
+the stream generator's contracts: arrival-count conservation under
+epoch splitting, rate-envelope linearity, per-seed determinism across
+process boundaries, and bit-compatibility of the ``none`` envelope
+with the legacy constant-rate draw.
+"""
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.sim.hybrid import epoch_bounds
+from repro.sim.requests import WorkloadConfig, zipf_lengths
+from repro.workloads import (cumulative_rate, envelope_shape,
+                             generate_stream, rate_on_grid,
+                             burst_overlay)
+
+from _hypothesis_support import given, settings, st
+
+
+def wl(n=400, qps=2.0, seed=0, **kw):
+    return WorkloadConfig(n_requests=n, qps=qps, seed=seed,
+                          min_len=64, max_len=256, **kw)
+
+
+# ------------------------------------------------ count conservation ----
+
+@given(n=st.integers(min_value=1, max_value=600),
+       seed=st.integers(min_value=0, max_value=2**31 - 1),
+       epoch_s=st.floats(min_value=10.0, max_value=600.0),
+       envelope=st.sampled_from(["none", "sinusoidal", "diurnal"]),
+       burst_gain=st.floats(min_value=1.0, max_value=4.0))
+@settings(max_examples=25, deadline=None)
+def test_epoch_splitting_conserves_arrival_count(n, seed, epoch_s,
+                                                 envelope, burst_gain):
+    """Splitting a stream into epochs never drops or duplicates a
+    request: per-epoch counts over bounds that cover the stream sum
+    to n, and the row ranges tile [0, n) without overlap."""
+    stream = generate_stream(wl(
+        n=n, seed=seed, envelope=envelope, envelope_period_h=1.0,
+        burst_gain=burst_gain, burst_mean_s=60.0,
+        burst_idle_mean_s=240.0)).sorted_by_ready()
+    bounds = epoch_bounds(float(stream.ready_s[-1]), epoch_s)
+    counts = stream.counts(bounds)
+    assert counts.sum() == n
+    lo = 0
+    for e in range(len(bounds) - 1):
+        i0, i1 = stream.window(float(bounds[e]), float(bounds[e + 1]))
+        assert i0 == lo and i1 - i0 == counts[e]
+        lo = i1
+    assert lo == n
+
+
+# ------------------------------------------------ envelope linearity ----
+
+@given(qps=st.floats(min_value=0.1, max_value=50.0),
+       k=st.floats(min_value=0.1, max_value=20.0),
+       amplitude=st.floats(min_value=0.0, max_value=0.9),
+       envelope=st.sampled_from(["none", "sinusoidal", "diurnal"]))
+@settings(max_examples=25, deadline=None)
+def test_rate_envelope_scales_linearly_in_qps(qps, k, amplitude,
+                                              envelope):
+    """lambda(t) = qps * envelope(t) * burst(t) is linear in qps: the
+    grid rate and its cumulative integral scale by exactly k."""
+    burst = burst_overlay(3, 3600.0, 2.0, 120.0, 600.0)
+    t1, lam1 = rate_on_grid(qps, envelope, amplitude, 1.0, 0.0,
+                            burst, 3600.0)
+    t2, lam2 = rate_on_grid(k * qps, envelope, amplitude, 1.0, 0.0,
+                            burst, 3600.0)
+    np.testing.assert_allclose(lam2, k * lam1, rtol=1e-12)
+    np.testing.assert_allclose(cumulative_rate(t2, lam2),
+                               k * cumulative_rate(t1, lam1), rtol=1e-12)
+
+
+def test_envelope_mean_stays_near_one():
+    """The diurnal modulation keeps qps the day-average rate: the
+    envelope's mean over a full period stays ~1."""
+    t = np.linspace(0.0, 24 * 3600.0, 24 * 360, endpoint=False)
+    for name in ("sinusoidal", "diurnal"):
+        shape = envelope_shape(name, t, 0.35, 24.0, 0.0)
+        assert abs(shape.mean() - 1.0) < 0.12, name
+        assert shape.min() >= 0.05
+
+
+# ------------------------------------------------ per-seed determinism ----
+
+_SUBPROCESS_PROBE = """
+import json, sys
+import numpy as np
+from repro.sim.requests import WorkloadConfig
+from repro.workloads import generate_stream
+s = generate_stream(WorkloadConfig(
+    n_requests=300, qps=3.0, seed=7, min_len=64, max_len=256,
+    envelope="diurnal", envelope_amplitude=0.4, burst_gain=2.5,
+    burst_mean_s=90.0, burst_idle_mean_s=400.0, deferrable_frac=0.3))
+print(json.dumps({
+    "arrival": s.arrival_s.tobytes().hex(),
+    "prefill": s.prefill_tokens.tobytes().hex(),
+    "decode": s.decode_tokens.tobytes().hex(),
+    "deferrable": s.deferrable.tobytes().hex(),
+}))
+"""
+
+
+def test_stream_deterministic_across_process_boundaries():
+    """The same (seed, config) reproduces the stream bit-for-bit in a
+    fresh interpreter — sweep cache keys and CI pins rely on it."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROBE],
+        capture_output=True, text=True, check=True)
+    import json
+    remote = json.loads(out.stdout)
+    s = generate_stream(WorkloadConfig(
+        n_requests=300, qps=3.0, seed=7, min_len=64, max_len=256,
+        envelope="diurnal", envelope_amplitude=0.4, burst_gain=2.5,
+        burst_mean_s=90.0, burst_idle_mean_s=400.0, deferrable_frac=0.3))
+    assert s.arrival_s.tobytes().hex() == remote["arrival"]
+    assert s.prefill_tokens.tobytes().hex() == remote["prefill"]
+    assert s.decode_tokens.tobytes().hex() == remote["decode"]
+    assert s.deferrable.tobytes().hex() == remote["deferrable"]
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_lengths_invariant_across_envelopes(seed):
+    """Enabling an envelope or burst overlay only moves arrival
+    *times*: the length/class draws consume the generator identically,
+    so per-seed token splits and class tags never change."""
+    base = generate_stream(wl(seed=seed, deferrable_frac=0.25))
+    for envelope, gain in (("sinusoidal", 1.0), ("diurnal", 3.0)):
+        mod = generate_stream(wl(
+            seed=seed, deferrable_frac=0.25, envelope=envelope,
+            envelope_period_h=1.0, burst_gain=gain,
+            burst_mean_s=60.0, burst_idle_mean_s=300.0))
+        np.testing.assert_array_equal(mod.prefill_tokens,
+                                      base.prefill_tokens)
+        np.testing.assert_array_equal(mod.decode_tokens,
+                                      base.decode_tokens)
+        np.testing.assert_array_equal(mod.deferrable, base.deferrable)
+
+
+# ------------------------------------------------ legacy bit-compat ----
+
+def test_none_envelope_keeps_legacy_stream_bitwise():
+    """envelope="none" + burst_gain<=1 must reproduce the legacy
+    constant-rate draw bit-for-bit (sweep caches and golden records
+    from before repro.workloads depend on it)."""
+    cfg = wl(n=500, qps=6.45, seed=3, deferrable_frac=0.2)
+    stream = generate_stream(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / cfg.qps, cfg.n_requests))
+    lengths = zipf_lengths(rng, cfg.n_requests, cfg.zipf_theta,
+                           cfg.min_len, cfg.max_len)
+    pf = cfg.pd_ratio / (cfg.pd_ratio + 1.0)
+    prefills = np.maximum(1, np.round(lengths * pf)).astype(int)
+    deferrable = rng.random(cfg.n_requests) < cfg.deferrable_frac
+    np.testing.assert_array_equal(stream.arrival_s, arrivals)
+    np.testing.assert_array_equal(stream.prefill_tokens, prefills)
+    np.testing.assert_array_equal(
+        stream.decode_tokens, np.maximum(1, lengths - prefills))
+    np.testing.assert_array_equal(stream.deferrable, deferrable)
+
+
+def test_to_requests_matches_legacy_generate():
+    """Materialized rows equal the legacy Request-list generator."""
+    from repro.sim.requests import generate
+    cfg = wl(n=64, seed=5, deferrable_frac=0.3)
+    reqs = generate(cfg)
+    rows = generate_stream(cfg).to_requests()
+    assert len(reqs) == len(rows) == 64
+    for a, b in zip(reqs, rows):
+        assert (a.rid, a.arrival_s, a.prefill_tokens, a.decode_tokens,
+                a.klass) == (b.rid, b.arrival_s, b.prefill_tokens,
+                             b.decode_tokens, b.klass)
