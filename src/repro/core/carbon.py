@@ -67,10 +67,20 @@ def emissions_batch(energy_wh: Sequence[float], gpu_hours: Sequence[float],
     c = np.asarray(ci, np.float64)
     op_g = e / 1000.0 * c
     emb_g = h * device.embodied_kg_per_hour * 1000.0
-    total_g = op_g + emb_g
+    return reports_from_arrays(op_g, emb_g, op_g + emb_g, c)
+
+
+def reports_from_arrays(op_g: Sequence[float], emb_g: Sequence[float],
+                        total_g: Sequence[float], ci: Sequence[float]
+                        ) -> List[CarbonReport]:
+    """Assemble ``CarbonReport`` rows from already-evaluated aligned
+    Eq. 4 terms — shared by ``emissions_batch`` (numpy pass) and the
+    sweep's device mode (the same elementwise ops inside one jax
+    program, which round identically; only reductions upstream of the
+    energy inputs can differ)."""
     return [CarbonReport(operational_g=float(o), embodied_g=float(m),
                          total_g=float(t), avg_ci=float(a))
-            for o, m, t, a in zip(op_g, emb_g, total_g, c)]
+            for o, m, t, a in zip(op_g, emb_g, total_g, ci)]
 
 
 def stage_attributed_carbon(trace, power_model: PowerModel,

@@ -53,6 +53,33 @@ def operational_energy(mfu: np.ndarray, stage_dur_s: np.ndarray,
                                   n_devices=n_devices, pues=(pue,))[0]
 
 
+def reports_from_sums(e_sum: float, m_sum: float, dur: float, peak: float,
+                      n_devices: int = 1, pues: Sequence[float] = (1.0,)
+                      ) -> List[EnergyReport]:
+    """Eq. 3 report assembly from the trace-level reductions alone:
+    ``e_sum`` = sum(P_i * dt_i) in W*s, ``m_sum`` = sum(MFU_i * dt_i),
+    ``dur`` = sum(dt_i), ``peak`` = max(P_i). One report per PUE value.
+
+    This is the single source of the report-assembly float sequence —
+    ``stacked_energy_reports`` feeds it numpy reductions; the sweep's
+    device mode feeds it the same reductions computed on-device (which
+    reassociate, hence that mode's ulp-level tolerance contract)."""
+    dur = float(dur)
+    gpu_h = dur / 3600.0 * n_devices
+    avg_power = float(e_sum / max(dur, 1e-12))
+    avg_mfu = float(m_sum / max(dur, 1e-12))
+    return [EnergyReport(
+        energy_wh=float(e_sum / 3600.0 * n_devices * pue),
+        gpu_hours=gpu_h,
+        avg_power_w=avg_power,
+        peak_power_w=float(peak),
+        avg_mfu=avg_mfu,
+        duration_s=dur,
+        n_devices=n_devices,
+        pue=pue,
+    ) for pue in pues]
+
+
 def stacked_energy_reports(mfu: np.ndarray, stage_dur_s: np.ndarray,
                            power_model: PowerModel, n_devices: int = 1,
                            pues: Sequence[float] = (1.0,)
@@ -67,20 +94,9 @@ def stacked_energy_reports(mfu: np.ndarray, stage_dur_s: np.ndarray,
     e_sum = np.sum(p * dt)                                   # W*s
     m_sum = np.sum(mfu * dt)
     dur = float(dt.sum())
-    gpu_h = dur / 3600.0 * n_devices
-    avg_power = float(e_sum / max(dur, 1e-12))
     peak = float(p.max()) if len(p) else 0.0
-    avg_mfu = float(m_sum / max(dur, 1e-12))
-    return [EnergyReport(
-        energy_wh=float(e_sum / 3600.0 * n_devices * pue),
-        gpu_hours=gpu_h,
-        avg_power_w=avg_power,
-        peak_power_w=peak,
-        avg_mfu=avg_mfu,
-        duration_s=dur,
-        n_devices=n_devices,
-        pue=pue,
-    ) for pue in pues]
+    return reports_from_sums(e_sum, m_sum, dur, peak,
+                             n_devices=n_devices, pues=pues)
 
 
 def operational_energy_trace(trace, power_model: PowerModel,

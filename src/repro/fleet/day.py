@@ -268,10 +268,24 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
         warm_plan = np.zeros(n_ep, int)
         asc_stats = {}
 
+    # The saturation check gets a model-derived capacity floor: the
+    # autoscaler's tokens_per_s is a configured estimate, and when it
+    # overstates what the roofline can actually serve, a queue-
+    # saturated epoch would be misplanned as fluid (the pilot tiles a
+    # growing queue and loses the latency tail). The autoscaler's own
+    # replica planning above stays on the configured estimate.
+    if len(sub):
+        cap_model = em.replica_tokens_per_s(
+            sched.batch_cap, sched.kv_budget_tokens,
+            float(np.mean(sub.prefill_tokens)),
+            float(np.mean(sub.decode_tokens)))
+    else:
+        cap_model = cap
     epochs = plan_epochs(sub, bounds, day, cap, replica_plan,
                          warm_plan=warm_plan,
                          scale_latency_s=asc.scale_up_latency_s,
-                         drain_counts=drain_counts)
+                         drain_counts=drain_counts,
+                         sat_tokens_per_s=min(cap, cap_model))
 
     def run_window(epoch: Epoch, lo: int, hi: int):
         reqs = sub.to_requests(lo, hi)

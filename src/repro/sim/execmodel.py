@@ -137,6 +137,20 @@ class _Params:
     pp: float
 
 
+#: flat field order of the roofline parameter vector
+#: (``ExecutionModel.params_vector`` / the device-mode batched program,
+#: which reconstructs ``_Params(*row)`` per trace group inside vmap)
+PARAMS_FIELDS = tuple(f.name for f in dataclasses.fields(_Params))
+
+#: relative tolerance for ``stage_cost_batch(backend="jax")`` against
+#: the ``"numpy"`` reference: the jitted kernel runs in float32 on
+#: default jax builds (eps ~1.2e-7) and the roofline chains ~6
+#: elementwise ops, so the observed divergence is a few f32 ulps;
+#: 1e-5 leaves roughly two decades of margin (pinned per paper model
+#: by tests/test_device_mode.py).
+JAX_BACKEND_RTOL = 1e-5
+
+
 def _roofline(prefill_tokens, decode_count, score_flops, kv_rw_bytes,
               p, xp=np):
     """The three-term roofline, elementwise over stages. ``xp`` is
@@ -219,6 +233,37 @@ class ExecutionModel:
     def _eff(self, tokens: float) -> float:
         c = self.cfg
         return c.eff_max * tokens / (tokens + c.eff_half_tokens)
+
+    def params_vector(self) -> np.ndarray:
+        """The resolved roofline parameters as a flat float64 vector in
+        ``PARAMS_FIELDS`` order — the per-group row the device-mode
+        sweep stacks into its (groups, params) tensor."""
+        return np.array([getattr(self._params, name)
+                         for name in PARAMS_FIELDS], np.float64)
+
+    def replica_tokens_per_s(self, batch_cap: int, kv_budget_tokens: int,
+                             mean_prefill: float, mean_decode: float
+                             ) -> float:
+        """Model-derived steady-state per-replica token throughput at
+        full batching: ``B`` requests of the mean shape served per
+        ``t_prefill(B*L) + D * t_decode(B @ mid-context)`` seconds,
+        with ``B`` capped by the batch cap and the KV budget.
+
+        Used by the day planner's saturation guard as a *capacity
+        floor* alongside the autoscaler's configured estimate — a
+        config estimate far above what the roofline can actually
+        serve would otherwise let a queue-saturated epoch slip
+        through the fluid path (whose pilot tiles a growing queue).
+        """
+        L = max(float(mean_prefill), 1.0)
+        D = max(float(mean_decode), 1.0)
+        per_req = L + D
+        b = min(float(batch_cap), float(kv_budget_tokens) / per_req)
+        b = max(1.0, np.floor(b))
+        t_pre = self.stage_cost_scalar([L] * int(b), [])[0].t_total
+        mid_ctx = L + np.floor(D / 2.0)
+        t_dec = self.stage_cost_scalar([], [mid_ctx] * int(b))[0].t_total
+        return b * per_req / max(t_pre + D * t_dec, 1e-9)
 
     def _score_per_token(self, ctx):
         """score FLOPs per token at context length(s) ctx (array op)."""

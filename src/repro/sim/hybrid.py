@@ -83,7 +83,8 @@ def plan_epochs(stream: ArrivalStream, bounds: np.ndarray, day: DayConfig,
                 tokens_per_s: float, replica_plan: np.ndarray,
                 warm_plan: Optional[np.ndarray] = None,
                 scale_latency_s: float = 0.0,
-                drain_counts: Optional[np.ndarray] = None) -> List[Epoch]:
+                drain_counts: Optional[np.ndarray] = None,
+                sat_tokens_per_s: Optional[float] = None) -> List[Epoch]:
     """Classify each epoch exact/fluid from the arrival stream alone.
 
     ``stream`` must be sorted by ready time. ``tokens_per_s`` is the
@@ -92,6 +93,15 @@ def plan_epochs(stream: ArrivalStream, bounds: np.ndarray, day: DayConfig,
     replica counts (the autoscale plan — a count change marks the
     epoch transient). The classification never looks at simulation
     output, so both day modes plan identically.
+
+    ``sat_tokens_per_s`` overrides the capacity used by the saturation
+    check only (``util_threshold``). The day driver passes the min of
+    the autoscaler's configured estimate and the roofline-derived
+    ``ExecutionModel.replica_tokens_per_s`` — an optimistic configured
+    estimate must not hide a queue-saturated epoch from the planner
+    (the fluid pilot would tile a growing queue, losing the latency
+    tail), while the autoscaler itself keeps planning replicas off its
+    own estimate.
     """
     n_ep = len(bounds) - 1
     edges = np.searchsorted(stream.ready_s, bounds, side="left")
@@ -104,6 +114,8 @@ def plan_epochs(stream: ArrivalStream, bounds: np.ndarray, day: DayConfig,
         0, n_ep - 1), stream.tokens.astype(np.float64))
     mean_tok = tok_sums / np.maximum(counts, 1)
     util1 = rates * mean_tok / max(tokens_per_s, 1e-9)
+    util_sat = (util1 if sat_tokens_per_s is None
+                else rates * mean_tok / max(sat_tokens_per_s, 1e-9))
     warm_plan = (np.zeros(n_ep, int) if warm_plan is None
                  else np.asarray(warm_plan))
     drain_counts = (np.zeros(n_ep) if drain_counts is None
@@ -118,7 +130,7 @@ def plan_epochs(stream: ArrivalStream, bounds: np.ndarray, day: DayConfig,
         prev_act = int(replica_plan[e - 1]) if e > 0 else n_act
         if n_act != prev_act:
             reason = "autoscale"
-        elif util1[e] / max(n_act, 1) > day.util_threshold:
+        elif util_sat[e] / max(n_act, 1) > day.util_threshold:
             reason = "saturation"
         elif e > 0 and (abs(rates[e] - rates[e - 1])
                         / max(rates[e], rates[e - 1], 1e-9)

@@ -62,6 +62,24 @@ class StageTrace:
             return 0.0
         return float((self.start_s + self.dur_s).max())
 
+    def iteration_rows(self, pp: int) -> "StageTrace":
+        """One row per scheduler iteration.
+
+        The event loop logs ``pp`` rows per iteration (one per
+        pipeline stage) sharing the same batch composition, so rows
+        ``0, pp, 2*pp, ...`` carry the iteration-level columns. The
+        sweep's trace-divergence analysis compares composition across
+        device/TP/PP grid points through this view (timing columns
+        still differ — only composition is parallelism-invariant).
+        """
+        if pp <= 1:
+            return self
+        if len(self) % pp:
+            raise ValueError(
+                f"trace length {len(self)} is not a multiple of pp={pp}")
+        return StageTrace(**{f.name: getattr(self, f.name)[::pp]
+                             for f in dataclasses.fields(StageTrace)})
+
 
 class StageTraceBuilder:
     """Row accumulator over a preallocated (capacity, n_fields) buffer

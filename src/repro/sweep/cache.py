@@ -6,6 +6,12 @@ is valid exactly as long as the scenario it describes is byte-identical.
 Layout: ``<root>/<key[:2]>/<key>.json`` — one JSON record per scenario.
 Writes are atomic (tmp file + rename) so parallel workers and
 interrupted runs never leave a torn entry behind.
+
+Reads and writes are additionally memoized in-process (bounded dict):
+repeated sweeps over overlapping grids in one process — the benchmark
+harness, notebook loops — skip the open+parse per hit. The on-disk
+entry stays authoritative; the memo only ever holds records this
+process itself read or wrote.
 """
 from __future__ import annotations
 
@@ -24,13 +30,19 @@ def default_cache_root() -> Path:
 
 
 class ResultCache:
+    _MEMO_CAP = 65536       # bound in-process memory, not correctness
+
     def __init__(self, root: Optional[Path] = None):
         self.root = Path(root) if root is not None else default_cache_root()
+        self._memo: dict = {}
 
     def path_for(self, key: str) -> Path:
         return self.root / key[:2] / f"{key}.json"
 
     def get(self, key: str) -> Optional[dict]:
+        memo = self._memo.get(key)
+        if memo is not None:
+            return memo
         path = self.path_for(key)
         try:
             with open(path) as f:
@@ -39,7 +51,13 @@ class ResultCache:
             return None
         if record.get("key") != key:        # corrupt/foreign entry
             return None
+        self._remember(key, record)
         return record
+
+    def _remember(self, key: str, record: dict) -> None:
+        if len(self._memo) >= self._MEMO_CAP:
+            self._memo.clear()
+        self._memo[key] = record
 
     def put(self, key: str, record: dict) -> Path:
         path = self.path_for(key)
@@ -55,6 +73,7 @@ class ResultCache:
             except OSError:
                 pass
             raise
+        self._remember(key, record)
         return path
 
     def iter_keys(self) -> Iterator[str]:
@@ -69,6 +88,7 @@ class ResultCache:
         return sum(1 for _ in self.iter_keys())
 
     def clear(self) -> int:
+        self._memo.clear()
         n = 0
         for key in list(self.iter_keys()):
             self.path_for(key).unlink(missing_ok=True)

@@ -37,13 +37,18 @@ def build_parser() -> argparse.ArgumentParser:
                    help="override per-scenario request count")
     p.add_argument("--workers", type=int, default=1,
                    help="scenario-level process parallelism (default 1)")
-    p.add_argument("--mode", choices=("vectorized", "event_loop"),
+    p.add_argument("--mode", choices=("vectorized", "event_loop", "device"),
                    default="vectorized",
                    help="vectorized: one event-loop run per unique "
                         "config, shared-trace axes (pue/grid_ci/post.*) "
                         "evaluated as stacked array passes; event_loop: "
                         "every scenario through the loop (bit-identical "
-                        "results either way)")
+                        "results either way); device: one batched jax "
+                        "program over all trace groups at once, sharing "
+                        "composition traces across device/tp/pp points "
+                        "where divergence analysis proves it safe "
+                        "(equivalent within a documented ulp-level "
+                        "tolerance, see repro.sweep.device)")
     p.add_argument("--no-cache", action="store_true",
                    help="disable the on-disk result cache")
     p.add_argument("--cache-dir", type=Path, default=None,

@@ -1,0 +1,264 @@
+"""Device-batched whole-grid evaluation (sweep ``--mode device``).
+
+One ``jax.jit`` + ``vmap`` program evaluates EVERY trace group's
+post-simulation passes at once: the groups' ``StageTrace`` composition
+columns are zero-padded and ragged-stacked into one ``(G, S)`` tensor
+set, and the batched roofline (the same ``_roofline`` kernel
+``stage_cost_batch`` runs), the Eq. 1-3 power/energy reductions and
+the Eq. 4 emissions — including the per-group scenario fan-out over
+the ``pue`` / ``grid_ci`` axes as a stacked ``(G, K)`` axis — compile
+into a single device dispatch for the whole grid, instead of one numpy
+pass per group (``repro.sweep.vectorized``).
+
+Trace acquisition composes with ``repro.sweep.divergence``: groups
+whose configs differ only in device/TP/PP and provably cannot diverge
+in admission timing share one composition schedule (replayed per
+config, bit-identically to the event loop) — the event loop runs only
+for groups the conservative predicate rejects. Record assembly reuses
+``runner.single_site_metrics``, so device-mode records carry exactly
+the event-loop columns.
+
+**Tolerance contract** (see README): numpy modes are bit-identical to
+the event loop; device mode is NOT — the roofline and the Eq. 2-4
+arithmetic are elementwise float64 (identical IEEE results under XLA),
+but (a) the trace-level reductions (``sum(P_i*dt_i)``, ``sum(dt_i)``,
+``sum(MFU_i*dt_i)``) reassociate — jnp's tree reduction vs numpy's
+pairwise summation, ~1e-14 relative — and (b) the Eq. 1 power curve
+is evaluated in float32 (mirroring ``core.power.power``) where XLA's
+fused ``pow`` may differ from the eager op by a few f32 ulps, ~1e-7
+relative on the power factor. ``DEVICE_MODE_RTOL`` bounds both with
+margin; columns that never pass through the device program (latency
+percentiles, throughput, MFU/batch averages, stage counts) come from
+the host-side trace and stay bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.carbon import reports_from_arrays
+from repro.core.energy import reports_from_sums
+from repro.core.power import DEVICES
+from repro.fleet.config import FleetConfig
+from repro.sim.execmodel import (PARAMS_FIELDS, _Params, _roofline,
+                                 cached_execution_model)
+from repro.sweep import divergence
+from repro.sweep.grid import Scenario
+from repro.sweep.vectorized import group_by_trace
+
+#: documented ulp-level equivalence bound for device-mode records
+#: against event-loop records (relative, per metric column) — the f32
+#: Eq. 1 power evaluation dominates (~1e-7); 5e-6 leaves >10x margin
+#: while still catching any real logic divergence. CI pins the perf
+#: grid under this bound (benchmarks/perf_sweep.py --check-device).
+DEVICE_MODE_RTOL = 5e-6
+
+
+@dataclasses.dataclass
+class DeviceStats:
+    """How the device mode acquired and evaluated its traces."""
+    trace_groups: int = 0
+    event_loops: int = 0     # groups driven through the event loop
+    replayed: int = 0        # groups served by divergence replay
+
+
+def _next_pow2(n: int) -> int:
+    """Padding bucket: shapes quantize to powers of two so jit
+    recompiles O(log) times across grids, not per grid size."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def _group_kernel(comp_pre, comp_dec, comp_score, comp_kv,
+                  params, powerp, ndev, phi, pues, cis):
+    """Per-group pass (vmapped over G): roofline -> Eq. 1 power ->
+    Eq. 2-3 reductions -> Eq. 4 terms over the scenario axis.
+
+    Zero-padded rows have tokens == 0, which the roofline kernel
+    already masks (all outputs zero), so only the power factor needs
+    an explicit ``live`` mask (P(0) = p_idle, not 0)."""
+    import jax.numpy as jnp
+
+    p = _Params(*(params[i] for i in range(len(PARAMS_FIELDS))))
+    t = _roofline(comp_pre, comp_dec, comp_score, comp_kv, p, jnp)
+    dur_s, mfu = t[0], t[6]
+    live = (comp_pre + comp_dec) > 0
+
+    # Eq. 1 in float32, mirroring core.power.power() op for op; the
+    # (p_max - p_idle) delta is precomputed host-side in f64 (powerp[4])
+    # exactly as the eager path subtracts python floats
+    mfu32 = jnp.clip(jnp.asarray(mfu, jnp.float32), 0.0, None)
+    x = jnp.minimum(mfu32, powerp[2]) / powerp[2]
+    pw = powerp[0] + powerp[4] * jnp.power(x, powerp[3])
+    pw64 = jnp.where(live, pw.astype(jnp.float64), 0.0)
+
+    e_sum = jnp.sum(pw64 * dur_s)                 # W*s
+    m_sum = jnp.sum(mfu * dur_s)
+    dur = jnp.sum(dur_s)
+    peak = jnp.max(pw64)                          # 0 for empty groups
+    gpu_h = dur / 3600.0 * ndev
+    energy_wh = e_sum / 3600.0 * ndev * pues      # (K,) scenario axis
+    op_g = energy_wh / 1000.0 * cis               # Eq. 4 operational
+    emb_g = gpu_h * phi * 1000.0                  # Eq. 4 embodied
+    return e_sum, m_sum, dur, peak, op_g, emb_g
+
+
+_PROGRAM = None
+
+
+def _program():
+    global _PROGRAM
+    if _PROGRAM is None:
+        import jax
+        _PROGRAM = jax.jit(jax.vmap(_group_kernel))
+    return _PROGRAM
+
+
+def _acquire_results(scenarios: Sequence[Scenario],
+                     single: List[List[int]], stats: DeviceStats
+                     ) -> Tuple[list, List[float]]:
+    """One SimResult per single-site trace group: divergence-shared
+    families replay one composition schedule per config; everything
+    else runs the event loop."""
+    from repro.sim import run_simulation
+
+    fams: Dict[str, List[int]] = {}
+    for gi, g in enumerate(single):
+        blob = divergence.family_blob(scenarios[g[0]].cfg)
+        fams.setdefault(blob, []).append(gi)
+
+    results: list = [None] * len(single)
+    sim_elapsed = [0.0] * len(single)
+    for members in fams.values():
+        cfgs = [scenarios[single[gi][0]].cfg for gi in members]
+        shared = (len(members) > 1
+                  and divergence.trace_shareable(cfgs)[0])
+        for gi, cfg in zip(members, cfgs):
+            t0 = time.perf_counter()
+            if shared:
+                results[gi] = divergence.replay_result(cfg)
+                stats.replayed += 1
+            else:
+                results[gi] = run_simulation(cfg)
+                stats.event_loops += 1
+            sim_elapsed[gi] = time.perf_counter() - t0
+    return results, sim_elapsed
+
+
+def execute_device_grid(scenarios: Sequence[Scenario]
+                        ) -> Tuple[List[dict], DeviceStats]:
+    """Execute a whole cache-missed grid: fleet scenarios pass through
+    their own rollup; every single-site trace group is padded into one
+    batched tensor set and evaluated by a single device program."""
+    import jax
+
+    from repro.sweep.runner import (_execute_fleet_scenario,
+                                    shared_result_metrics,
+                                    single_site_metrics,
+                                    single_site_record)
+
+    groups = group_by_trace(scenarios)
+    stats = DeviceStats(trace_groups=len(groups))
+    records: List[Optional[dict]] = [None] * len(scenarios)
+
+    single: List[List[int]] = []
+    for g in groups:
+        if isinstance(scenarios[g[0]].cfg, FleetConfig):
+            # fleet rollups bake CI signals and PUE into per-site
+            # co-sims — no stacked axis; identical to the other modes
+            for i in g:
+                records[i] = _execute_fleet_scenario(scenarios[i])
+        else:
+            single.append(g)
+    if not single:
+        return [r for r in records if r is not None], stats
+
+    results, sim_elapsed = _acquire_results(scenarios, single, stats)
+
+    # ---- pad + ragged-stack into one (G, S) / (G, K) tensor set ----
+    n_g = len(single)
+    gp = _next_pow2(n_g)
+    sp = _next_pow2(max(max(len(r.stages) for r in results), 1))
+    kp = _next_pow2(max(max(len(g) for g in single), 1))
+    comp = np.zeros((4, gp, sp))
+    params = np.ones((gp, len(PARAMS_FIELDS)))
+    powerp = np.zeros((gp, 5), np.float32)
+    powerp[:, 2] = 0.5                   # padded groups: x = 0/0 guard
+    powerp[:, 3] = 1.0
+    ndev = np.ones(gp)
+    phi = np.zeros(gp)
+    pues = np.zeros((gp, kp))
+    cis = np.zeros((gp, kp))
+    for gi, (g, res) in enumerate(zip(single, results)):
+        cfg = res.cfg
+        tr = res.stages
+        m = len(tr)
+        comp[0, gi, :m] = tr.n_prefill_tokens
+        comp[1, gi, :m] = tr.n_decode_tokens
+        comp[2, gi, :m] = tr.score_flops
+        comp[3, gi, :m] = tr.kv_rw_bytes
+        em = cached_execution_model(cfg.model, cfg.device, cfg.tp,
+                                    cfg.pp, cfg.execmodel)
+        params[gi] = em.params_vector()
+        dev = DEVICES[cfg.device]
+        powerp[gi] = np.asarray(
+            [dev.p_idle, dev.p_max_inst, dev.mfu_sat, dev.gamma,
+             dev.p_max_inst - dev.p_idle], np.float32)
+        ndev[gi] = float(cfg.n_devices)
+        phi[gi] = dev.embodied_kg_per_hour
+        for k, i in enumerate(g):
+            pues[gi, k] = scenarios[i].pue
+            cis[gi, k] = scenarios[i].grid_ci
+
+    # ---- the single dispatch for the whole grid ----
+    # enable_x64 is scoped: the program traces/executes in f64 without
+    # flipping the process-global default (kernel/launcher tests in the
+    # same process rely on f32 defaults)
+    with jax.experimental.enable_x64():
+        out = _program()(comp[0], comp[1], comp[2], comp[3],
+                         params, powerp, ndev, phi, pues, cis)
+        e_sum, m_sum, dur, peak, op_g, emb_g = (np.asarray(o)
+                                                for o in out)
+
+    # ---- record assembly through the shared single-site path ----
+    for gi, (g, res) in enumerate(zip(single, results)):
+        scs = [scenarios[i] for i in g]
+        cfg = res.cfg
+        shared_m = shared_result_metrics(res)
+        reps = reports_from_sums(
+            float(e_sum[gi]), float(m_sum[gi]), float(dur[gi]),
+            float(peak[gi]), n_devices=cfg.n_devices,
+            pues=[sc.pue for sc in scs])
+        emb = float(emb_g[gi])
+        ops = [float(o) for o in op_g[gi, :len(g)]]
+        carbons = reports_from_arrays(
+            ops, [emb] * len(g), [o + emb for o in ops],
+            [sc.grid_ci for sc in scs])
+        for i, sc, rep, carbon in zip(g, scs, reps, carbons):
+            rec_t0 = time.perf_counter() - sim_elapsed[gi]
+            metrics = single_site_metrics(res, sc, rep, carbon=carbon,
+                                          shared=shared_m)
+            records[i] = single_site_record(
+                sc, metrics, rec_t0, mode="device",
+                trace_scenarios=len(scs))
+    return [r for r in records if r is not None], stats
+
+
+def records_max_rel_err(recs_a: Sequence[dict], recs_b: Sequence[dict]
+                        ) -> float:
+    """Worst relative metric divergence between two aligned record
+    sets (aligned by cache key) — what the CI perf job and the
+    equivalence tests bound by ``DEVICE_MODE_RTOL``."""
+    by_key = {r["key"]: r for r in recs_b}
+    worst = 0.0
+    for a in recs_a:
+        b = by_key[a["key"]]
+        for col, va in a["metrics"].items():
+            vb = b["metrics"][col]
+            if va == vb:
+                continue
+            rel = abs(va - vb) / max(abs(va), abs(vb))
+            worst = max(worst, rel)
+    return worst

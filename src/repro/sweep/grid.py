@@ -59,7 +59,13 @@ from repro.sim.simulator import SimConfig
 # on FleetConfig) changes every digest; metrics under the defaults
 # (no envelope, autoscaler disabled, day=None) are bit-identical to
 # v4 — pinned by tests/test_day.py golden records.
-SCHEMA_VERSION = 5
+# v6: the day planner's saturation guard gained a model-derived
+# capacity floor (min of the autoscaler's tokens_per_s estimate and
+# the roofline's replica_tokens_per_s), which can reclassify
+# queue-saturated epochs from fluid to exact — day-grid records
+# change; everything else is bit-identical to v5, pinned by the
+# fig1/fleet/shift golden records in tests/test_day.py.
+SCHEMA_VERSION = 6
 
 # Default static grid carbon intensity for the report's carbon columns
 # (gCO2eq/kWh; CAISO-ish annual average — the paper's co-sim case study
@@ -117,17 +123,31 @@ def _jsonable(value):
     return value
 
 
+def _canonical_json(obj) -> str:
+    return json.dumps(obj, sort_keys=True, default=str,
+                      separators=(",", ":"))
+
+
+def config_blob(cfg) -> str:
+    """Canonical JSON of the config tree alone — the expensive part of
+    a digest (``dataclasses.asdict`` over the full tree plus the JSON
+    encode), shared between a scenario's ``key`` and ``trace_key``."""
+    return _canonical_json(dataclasses.asdict(cfg))
+
+
+def _digest_from_blobs(cfg_json: str, extra_json: str) -> str:
+    # assembles the exact bytes json.dumps(payload, sort_keys=True)
+    # would produce: the payload keys already sort cfg < extra < schema
+    blob = (f'{{"cfg":{cfg_json},"extra":{extra_json},'
+            f'"schema":{SCHEMA_VERSION}}}')
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 def config_digest(cfg: SimConfig, extra: Optional[Mapping] = None) -> str:
     """Stable content hash of a scenario: canonical JSON of the full
     config tree (+ runner knobs) under the current schema version."""
-    payload = {
-        "schema": SCHEMA_VERSION,
-        "cfg": dataclasses.asdict(cfg),
-        "extra": dict(extra or {}),
-    }
-    blob = json.dumps(payload, sort_keys=True, default=str,
-                      separators=(",", ":"))
-    return hashlib.sha256(blob.encode()).hexdigest()
+    return _digest_from_blobs(config_blob(cfg),
+                              _canonical_json(dict(extra or {})))
 
 
 def derive_seed(params: Mapping[str, object]) -> int:
@@ -164,14 +184,25 @@ class Scenario:
         default=None, init=False, repr=False, compare=False)
     _trace_key: Optional[str] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    _cfg_blob: Optional[str] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    @property
+    def cfg_blob(self) -> str:
+        """Canonical config JSON, serialized once per scenario — both
+        digests below reuse it (the asdict+encode pass dominates
+        per-scenario runner overhead on large stacked grids)."""
+        if self._cfg_blob is None:
+            self._cfg_blob = config_blob(self.cfg)
+        return self._cfg_blob
 
     @property
     def key(self) -> str:
         if self._key is None:
-            self._key = config_digest(self.cfg, extra={
+            self._key = _digest_from_blobs(self.cfg_blob, _canonical_json({
                 "pue": self.pue, "grid_ci": self.grid_ci,
                 "post": self.post, "post_params": self.post_params,
-            })
+            }))
         return self._key
 
     @property
@@ -180,7 +211,7 @@ class Scenario:
         trace depends on, nothing the report knobs touch (the
         vectorized runner's grouping key)."""
         if self._trace_key is None:
-            self._trace_key = config_digest(self.cfg)
+            self._trace_key = _digest_from_blobs(self.cfg_blob, "{}")
         return self._trace_key
 
 

@@ -14,6 +14,12 @@ scenario-level PUE / grid-CI / post-processor axes — runs the event
 loop once per group, and evaluates the shared-trace axes as stacked
 array passes (``repro.sweep.vectorized``); bit-identical to
 ``"event_loop"``, which executes every scenario through the loop.
+``"device"`` additionally pads every trace group into one batched
+tensor set and evaluates the roofline/energy/carbon passes as a single
+jax program over the whole grid, with divergence analysis sharing
+composition traces across device/TP/PP points where provably safe
+(``repro.sweep.device``); equivalent to the numpy modes within the
+documented ``DEVICE_MODE_RTOL``.
 
 Post-processors extend a scenario with derived analyses that need the
 full ``SimResult`` (e.g. the Table 2 microgrid co-simulation); they are
@@ -35,7 +41,7 @@ from repro.fleet.config import FleetConfig
 from repro.sweep.cache import ResultCache
 from repro.sweep.grid import SCHEMA_VERSION, Scenario
 
-EXECUTION_MODES = ("vectorized", "event_loop")
+EXECUTION_MODES = ("vectorized", "event_loop", "device")
 
 
 # --------------------------------------------------------------------------
@@ -237,14 +243,20 @@ class SweepStats:
     workers: int = 1
     mode: str = "vectorized"
     trace_groups: int = 0     # unique simulation traces actually driven
+    event_loops: int = 0      # device mode: groups run through the loop
+    replayed: int = 0         # device mode: groups shared via divergence
 
     def summary(self) -> str:
         groups = (f", {self.trace_groups} trace group(s)"
-                  if self.mode == "vectorized" and self.executed else "")
+                  if self.mode in ("vectorized", "device") and self.executed
+                  else "")
+        shared = (f" ({self.event_loops} event loop(s), "
+                  f"{self.replayed} replayed)"
+                  if self.mode == "device" and self.executed else "")
         return (f"{self.total} scenarios: {self.executed} executed, "
                 f"{self.cache_hits} cache hits, "
                 f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)"
-                f"{groups}")
+                f"{groups}{shared}")
 
 
 class SweepRunner:
@@ -255,6 +267,10 @@ class SweepRunner:
     fanning *groups* out over workers; ``mode="event_loop"`` executes
     every scenario independently (the historical behavior). Both modes
     produce bit-identical records (pinned by tests/test_vectorized.py).
+    ``mode="device"`` evaluates all groups in one batched jax program
+    (always in-process — the single dispatch IS the parallelism) and
+    matches the numpy modes within ``device.DEVICE_MODE_RTOL`` (pinned
+    by tests/test_device_mode.py).
 
     ``workers > 1`` uses a spawn-context process pool (fork is unsafe
     once jax has started its threadpools). ``cache=None`` disables
@@ -311,6 +327,8 @@ class SweepRunner:
             todo = [scenarios[i] for i in misses]
             if self.mode == "vectorized":
                 fresh, stats.trace_groups = self._run_vectorized(todo, note)
+            elif self.mode == "device":
+                fresh = self._run_device(todo, note, stats)
             else:
                 fresh = self._run_event_loop(todo, note)
             for i, record in zip(misses, fresh):
@@ -359,6 +377,17 @@ class SweepRunner:
             for j, rec in zip(idxs, recs):
                 fresh[j] = rec
         return fresh, len(groups)
+
+    def _run_device(self, todo: List[Scenario], note,
+                    stats: SweepStats) -> List[dict]:
+        from repro.sweep.device import execute_device_grid
+        note(f"executing {len(todo)} scenarios as one device-batched "
+             "grid program")
+        fresh, dstats = execute_device_grid(todo)
+        stats.trace_groups = dstats.trace_groups
+        stats.event_loops = dstats.event_loops
+        stats.replayed = dstats.replayed
+        return fresh
 
 
 def run_scenarios(scenarios: Sequence[Scenario], workers: int = 1,

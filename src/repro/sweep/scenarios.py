@@ -658,27 +658,46 @@ def _day_derive(records: List[dict]) -> str:
 # ---------------------------------------------------------------- perf ----
 
 def _perf_build(smoke: bool, n_requests: Optional[int] = None):
-    """Perf-trajectory grid (``benchmarks/perf_sweep.py``): ~1k
-    scenarios spanning the paper's grid-condition axes — a few
-    workload points x a dense (PUE x grid-CI) report plane. The
-    scenario-level axes share traces, so the vectorized runner drives
-    one event loop per QPS point and stacks the rest; the event-loop
-    runner simulates all ~1k, which is exactly the contrast
+    """Perf-trajectory grid (``benchmarks/perf_sweep.py``), two planes:
+
+    * plane A — a few QPS points x a dense (PUE x grid-CI) report
+      plane: scenario-level axes share traces, so the vectorized
+      runner drives one event loop per QPS point and stacks the rest
+      (the historical ~1k-scenario grid);
+    * plane B — a hardware family (device x TP x PP) over one sparse
+      uniform-arrival stream: every point is its own trace group for
+      the numpy modes, but the arrivals are provably isolated under
+      every config, so device-mode divergence analysis shares one
+      composition schedule and replays it per point instead of
+      re-running the event loop 8x (``repro.sweep.divergence``).
+
+    The event-loop runner simulates everything; the contrasts are what
     ``BENCH_sweep.json`` tracks."""
     qps = [2.0, 4.0, 6.45, 8.0]
     pues = [round(1.0 + 0.05 * i, 2) for i in range(16)]
     cis = [round(25.0 + 45.0 * i, 1) for i in range(16)]
     n = n_requests or (16 if smoke else 64)
-    return GridSpec(
+    plane_a = GridSpec(
         base=PAPER_DEFAULT, tag="perf",
         axes={"workload.qps": qps, "pue": pues, "grid_ci": cis},
         fixed={"workload.n_requests": n, "workload.min_len": 64,
                "workload.max_len": 256}).expand()
+    hw = [(dev, tp, pp) for dev in ("a100", "h100")
+          for tp, pp in ((1, 1), (2, 1), (1, 2), (2, 2))]
+    plane_b = GridSpec(
+        base=PAPER_DEFAULT, tag="perf",
+        axes={"device+tp+pp": hw,
+              "pue": [1.1, 1.3], "grid_ci": [100.0, 400.0]},
+        fixed={"workload.n_requests": 4 * n, "workload.qps": 0.5,
+               "workload.arrival": "uniform", "workload.min_len": 64,
+               "workload.max_len": 256}).expand()
+    return plane_a + plane_b
 
 
 def _perf_derive(records: List[dict]) -> str:
     rows = flatten(records)
-    traces = len({(r["qps"]) for r in rows})
+    traces = len({(r.get("qps"), r.get("device"), r.get("tp"),
+                   r.get("pp")) for r in rows})
     return (f"scenarios={len(rows)};unique_traces={traces};"
             f"shared_axis_points={len(rows) // max(traces, 1)}")
 

@@ -24,6 +24,12 @@ pass through unchanged.
 Both paths assemble records through ``runner.single_site_metrics``,
 so vectorized and event-loop records are bit-identical (pinned by
 tests/test_vectorized.py).
+
+``repro.sweep.device`` builds on the same grouping: instead of one
+numpy pass per group, it pads every group's trace into one batched
+tensor set and evaluates the whole grid in a single jax program, with
+divergence analysis (``repro.sweep.divergence``) sharing composition
+traces across device/TP/PP points where provably safe.
 """
 from __future__ import annotations
 

@@ -1,10 +1,12 @@
 """Fluid/request hybrid day simulation (repro.sim.hybrid +
 repro.fleet.day): cross-mode agreement, fluid==exact degeneration,
-autoscale planning, and the schema-5 golden record pin.
+autoscale planning, saturated-epoch exactness, and the schema-6
+golden record pins (fig1 single-site, fleet rollup, shift policy).
 """
 import dataclasses
 
 import numpy as np
+import pytest
 
 from repro.configs.paper_models import LLAMA3_8B
 from repro.fleet.autoscale import AutoscalerConfig, plan_replicas
@@ -39,6 +41,7 @@ def day_cfg(mode, n=3000, span=1800.0, **day_kw):
 
 # ---------------------------------------------- cross-mode agreement ----
 
+@pytest.mark.slow
 def test_hybrid_agrees_with_event_loop_day():
     """The day-smoke acceptance, at test scale: identical epoch plans,
     planned-exact epochs bit-for-bit, fluid epochs and day totals
@@ -59,6 +62,7 @@ def test_hybrid_agrees_with_event_loop_day():
     assert agree["n_fluid_epochs"] >= 1
 
 
+@pytest.mark.slow
 def test_day_sweep_smoke_records_agree():
     """The actual day sweep scenarios (what CI runs) pair up and pass
     the agreement gate at reduced request count."""
@@ -111,6 +115,52 @@ def test_fluid_equals_exact_without_transients_example():
 
 
 # ---------------------------------------------- epoch planning ----
+
+def _saturated_cfg(mode):
+    """Demand that saturates the roofline's actual capacity while
+    staying comfortably under the autoscaler's *configured* estimate:
+    batch_cap=1 crushes per-replica throughput to ~970 tok/s while the
+    stream offers ~1730 tok/s — below the default 4000 tok/s estimate
+    the planner used to trust, so before the model-derived floor these
+    epochs were misplanned as fluid (tiling a growing queue)."""
+    wl = WorkloadConfig(n_requests=450, qps=9.0, min_len=192, max_len=192,
+                        seed=3)
+    return FleetConfig(
+        model=LLAMA3_8B,
+        sites=(SiteConfig(name="s0", ci_trace="caiso",
+                          scheduler=SchedulerConfig(batch_cap=1)),),
+        workload=wl, router="round_robin",
+        day=DayConfig(mode=mode, epoch_s=25.0, pilot_requests=64,
+                      warmup_requests=16, util_threshold=0.6))
+
+
+def test_saturated_epochs_run_exact():
+    """ROADMAP fluid-fidelity gap: queue-saturated epochs must run
+    exact via util_threshold even when the configured capacity
+    estimate is optimistic. The planner's saturation check uses
+    min(configured, roofline) capacity; with the whole window
+    saturated the hybrid day IS the event-loop day, bit-for-bit."""
+    # the planner sees saturation only through the model-derived floor
+    cfg = _saturated_cfg("hybrid")
+    stream = generate_stream(cfg.workload).sorted_by_ready()
+    bounds = epoch_bounds(float(stream.ready_s[-1]), 25.0)
+    ones = np.ones(len(bounds) - 1, int)
+    blind = plan_epochs(stream, bounds, cfg.day, tokens_per_s=4000.0,
+                        replica_plan=ones)
+    floored = plan_epochs(stream, bounds, cfg.day, tokens_per_s=4000.0,
+                          replica_plan=ones, sat_tokens_per_s=967.0)
+    assert not any(e.reason == "saturation" for e in blind)
+    assert any(e.reason == "saturation" for e in floored)
+
+    hyb = run_fleet_day(_saturated_cfg("hybrid")).summary()
+    exa = run_fleet_day(_saturated_cfg("event_loop")).summary()
+    assert hyb["n_exact_saturation"] >= 1
+    assert hyb["n_fluid_epochs"] == 0.0
+    assert hyb["sim_fraction"] == 1.0
+    assert hyb.keys() == exa.keys()
+    for k in hyb:                     # latency percentiles included
+        assert hyb[k] == exa[k], k
+
 
 def test_plan_epochs_marks_transients():
     """Burst/ramp/drain/saturation classification from the stream
@@ -218,12 +268,13 @@ def test_day_autoscaler_tracks_diurnal_swing():
     assert m["n_exact_autoscale"] >= 1
 
 
-# ---------------------------------------------- schema-5 golden pin ----
+# ---------------------------------------------- golden record pins ----
 
-#: fig1's qps=6.45 smoke scenario under cache schema 5 — the defaults
-#: migration (SCHEMA_VERSION 4 -> 5) is metric-preserving, so these
-#: values are pinned bit-for-bit; any drift means cached and fresh
-#: sweep results have silently diverged
+#: fig1's qps=6.45 smoke scenario — the schema migrations since v4
+#: (v5 day-scale config defaults, v6 saturation capacity floor) are
+#: metric-preserving on non-day grids, so these values are pinned
+#: bit-for-bit; any drift means cached and fresh sweep results have
+#: silently diverged
 GOLDEN_FIG1_QPS645 = {
     "energy_wh": 1.4322530783827812,
     "energy_kwh": 0.0014322530783827813,
@@ -246,11 +297,90 @@ GOLDEN_FIG1_QPS645 = {
 }
 
 
-def test_schema5_fig1_golden_record_bitwise():
+def test_schema6_fig1_golden_record_bitwise():
     from repro.sweep import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 5
+    assert SCHEMA_VERSION == 6
     scenario = SWEEPS["fig1"].build(True)[1]
     assert scenario.params["qps"] == 6.45
     metrics = execute_scenario(scenario)["metrics"]
     for key, want in GOLDEN_FIG1_QPS645.items():
+        assert metrics[key] == want, (key, metrics[key], want)
+
+
+#: first fleet smoke scenario (a100+a100, hydro+coal, round_robin) —
+#: pins the multi-site rollup path the single-site fig1 golden never
+#: touches (per-site CI integration, router accounting)
+GOLDEN_FLEET_0 = {
+    'energy_wh': 1.092477023949911,
+    'avg_power_w': 171.74517346211357,
+    'gpu_hours': 0.005300862327633853,
+    'avg_mfu': 0.09211997066701397,
+    'duration_s': 10.909038240255882,
+    'throughput_qps': 5.866694990932475,
+    'carbon_operational_g': 2.7582991123199463,
+    'carbon_active_g': 0.43435087210468903,
+    'carbon_embodied_g': 0.01815363810833511,
+    'carbon_total_g': 2.7764527797698975,
+    'n_sites': 2.0,
+    'n_requests_done': 64.0,
+    'ttft_p50_s': 0.07319967537753103,
+    'ttft_p99_s': 0.15043498201783967,
+    'e2e_p50_s': 0.629958418846202,
+    'e2e_p99_s': 1.36738208669471,
+    's0-hydro_n_requests': 32.0,
+    's0-hydro_energy_wh': 0.54200207712589,
+    's0-hydro_carbon_g': 0.23574601113796234,
+    's0-hydro_avg_ci': 69.99655973382168,
+    's1-coal_n_requests': 32.0,
+    's1-coal_energy_wh': 0.5504749468240211,
+    's1-coal_carbon_g': 2.5225532054901123,
+    's1-coal_avg_ci': 720.0170157548899,
+}
+
+#: first shift smoke scenario (immediate policy, oracle forecaster,
+#: carbon_slo router) — pins the temporal-scheduling path: workload
+#: classes, deferral accounting, CI-aware routing
+GOLDEN_SHIFT_0 = {
+    'energy_wh': 2.302418519809514,
+    'avg_power_w': 140.14964174039451,
+    'gpu_hours': 0.013690239061726056,
+    'avg_mfu': 0.04909326371791185,
+    'duration_s': 25200.0,
+    'throughput_qps': 0.0038095238095238095,
+    'carbon_operational_g': 702.7404174804688,
+    'carbon_active_g': 0.19239934051510488,
+    'carbon_embodied_g': 0.04688438034837691,
+    'carbon_total_g': 702.7872924804688,
+    'n_requests_done': 96.0,
+    'n_interactive': 52.0,
+    'n_deferrable': 44.0,
+    'deferred_fraction': 0.0,
+    'interactive_ttft_p50_s': 0.06128641906161647,
+    'interactive_ttft_p99_s': 0.10634317996388745,
+    'deferrable_e2e_p50_s': 0.4926409237589269,
+    'deferrable_e2e_p99_s': 1.0048028740638801,
+    'interactive_slo_violations': 0.0,
+    'deadline_violations': 0.0,
+    's0-hydro-evening_n_requests': 96.0,
+    's0-hydro-evening_energy_wh': 2.302418519809514,
+    's0-hydro-evening_carbon_g': 72.885009765625,
+    's1-coal-evening_n_requests': 0.0,
+    's1-coal-evening_carbon_g': 629.8554077148438,
+    's1-coal-evening_avg_ci': 749.8277178943864,
+}
+
+
+def test_schema6_fleet_golden_record_bitwise():
+    scenario = SWEEPS["fleet"].build(True)[0]
+    assert scenario.params["devices"] == "a100+a100"
+    metrics = execute_scenario(scenario)["metrics"]
+    for key, want in GOLDEN_FLEET_0.items():
+        assert metrics[key] == want, (key, metrics[key], want)
+
+
+def test_schema6_shift_golden_record_bitwise():
+    scenario = SWEEPS["shift"].build(True)[0]
+    assert scenario.params["policy"] == "immediate"
+    metrics = execute_scenario(scenario)["metrics"]
+    for key, want in GOLDEN_SHIFT_0.items():
         assert metrics[key] == want, (key, metrics[key], want)

@@ -44,6 +44,9 @@ def _run(cmd, timeout=None, devices=4):
                                f"{devices}"})
 
 
+# full interpreter + XLA-compile round trips per launcher: the heavy
+# tail of tier-1, so they run in the dedicated slow pass
+@pytest.mark.slow
 def test_train_launcher_spmd(tmp_path):
     r = _run([sys.executable, "-m", "repro.launch.train",
               "--arch", "stablelm-1.6b", "--reduced", "--steps", "2",
@@ -52,6 +55,7 @@ def test_train_launcher_spmd(tmp_path):
     assert "done: step 2" in r.stdout
 
 
+@pytest.mark.slow
 def test_serve_launcher():
     r = _run([sys.executable, "-m", "repro.launch.serve",
               "--arch", "zamba2-1.2b", "--requests", "2",

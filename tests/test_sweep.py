@@ -110,11 +110,13 @@ def test_smoke_sweeps_expand_for_every_figure():
     assert set(SWEEPS) == {"fig1", "fig2", "fig3", "fig4", "fig5",
                            "exp5", "table2", "carbon", "fleet", "shift",
                            "perf", "day"}
-    # perf is the runner-throughput grid: deliberately ~1k scenarios,
-    # but they collapse to a handful of unique traces; day's smoke is
+    # perf is the runner-throughput grid: deliberately ~1k scenarios
+    # (1024 stacked-axis points + a 32-scenario hardware family for
+    # device-mode divergence sharing), but they collapse to a handful
+    # of unique traces; day's smoke is
     # four whole-day hybrid/event_loop runs over an array-native
     # stream, so its request count is epoch-planned, not event-stepped
-    smoke_caps = {"shift": 18, "perf": 1024}
+    smoke_caps = {"shift": 18, "perf": 1056}
     request_caps = {"day": 10_000}
     for name, sweep in SWEEPS.items():
         scenarios = sweep.build(True)
