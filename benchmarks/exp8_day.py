@@ -9,7 +9,10 @@ percent of the requests (transient epochs + fluid pilots).
 
 The hybrid-vs-exact *agreement* bar lives in the ``day`` sweep
 (``python -m repro.sweep.cli day --smoke``) and tests/test_day.py;
-this benchmark tracks scale and speed.
+this benchmark tracks scale and speed. The timed run executes under
+the ``repro.obs`` wall-clock profiler, so the bench JSON also carries
+a ``phases`` breakdown (workload gen, admission, epoch planning and
+evaluation, per-site microgrid co-sim).
 
 Usage: python -m benchmarks.exp8_day [--smoke] [--check MAX_WALL_S]
 """
@@ -76,14 +79,25 @@ def build_config(n_requests: int = DAY_N, span_s: float = DAY_SPAN_S,
 
 def measure(smoke: bool = False, n_requests=None) -> dict:
     from repro.fleet.day import run_fleet_day
+    from repro.obs.spans import PROFILER
     from repro.sweep import SCHEMA_VERSION
 
     n = n_requests or (20_000 if smoke else DAY_N)
     span = 2 * 3600.0 if smoke else DAY_SPAN_S
     cfg = build_config(n_requests=n, span_s=span)
+    # the timed run doubles as the wall-clock phase breakdown (day
+    # drivers carry repro.obs spans: workload gen, admission, epoch
+    # planning/eval, per-site co-sim)
+    PROFILER.enable(reset=True)
     t0 = time.perf_counter()
-    res = run_fleet_day(cfg)
-    wall_s = time.perf_counter() - t0
+    try:
+        res = run_fleet_day(cfg)
+    finally:
+        wall_s = time.perf_counter() - t0
+        PROFILER.disable()
+    phases = {name: {"count": int(a["count"]),
+                     "total_s": round(a["total_s"], 3)}
+              for name, a in sorted(PROFILER.aggregate().items())}
     m = res.summary()
     return {
         "bench": "exp8_day",
@@ -110,6 +124,7 @@ def measure(smoke: bool = False, n_requests=None) -> dict:
         "scale_ups": int(m["scale_ups"]),
         "scale_downs": int(m["scale_downs"]),
         "replica_peak": int(m["replica_peak"]),
+        "phases": phases,
     }
 
 

@@ -115,6 +115,10 @@ class ReplicaController:
             self.events.append(ScaleEvent(
                 t_s, self.n_active, self.n_warm,
                 "up_warm" if warm else "up_cold"))
+            if site.probe is not None:
+                site.probe.on_scale(t_s, site.site_index, self.n_active,
+                                    self.n_warm,
+                                    "up_warm" if warm else "up_cold")
             return True
         if delay < cfg.delay_lo_s and self.n_active > cfg.min_replicas \
                 and site.ci_at(t_s) >= cfg.ci_scale_down_g:
@@ -123,6 +127,9 @@ class ReplicaController:
             site.replicas.n_active = self.n_active
             self.events.append(ScaleEvent(
                 t_s, self.n_active, self.n_warm, "down"))
+            if site.probe is not None:
+                site.probe.on_scale(t_s, site.site_index, self.n_active,
+                                    self.n_warm, "down")
             return True
         return False
 

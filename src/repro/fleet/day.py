@@ -39,6 +39,7 @@ from repro.fleet.autoscale import plan_replicas
 from repro.fleet.config import FleetConfig, SiteConfig
 from repro.fleet.routing import RoundRobinRouter
 from repro.fleet.simulation import LoopSite, drive
+from repro.obs.spans import PROFILER
 from repro.schedule import fleet_ci_forecast, make_forecaster
 from repro.schedule.epochs import epoch_deferral
 from repro.sim.hybrid import (EXACT, DayConfig, Epoch, EpochEval,
@@ -230,7 +231,10 @@ def _assign_sites(cfg: FleetConfig, stream: ArrivalStream,
 
 def _run_site_day(cfg: FleetConfig, site: SiteConfig,
                   sub: ArrivalStream, bounds: np.ndarray,
-                  drain_counts: np.ndarray, ci: Signal) -> DaySiteResult:
+                  drain_counts: np.ndarray, ci: Signal,
+                  probe=None) -> DaySiteResult:
+    """``probe`` is already site-tagged (``SiteIndexProbe``) — every
+    hook here reports local site 0 and the wrapper re-tags."""
     from repro.sim.execmodel import cached_execution_model
 
     day = cfg.day
@@ -260,13 +264,14 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
     util1 = tok_sums / np.maximum(np.diff(bounds), 1e-9) / max(cap, 1e-9)
     ci_mean = np.asarray(ci.at(0.5 * (bounds[:-1] + bounds[1:])),
                          np.float64)
-    if asc.enabled:
-        replica_plan, warm_plan, asc_stats = plan_replicas(
-            asc, util1, ci_mean, site.n_replicas)
-    else:
-        replica_plan = np.full(n_ep, site.n_replicas, int)
-        warm_plan = np.zeros(n_ep, int)
-        asc_stats = {}
+    with PROFILER.span("day.plan"):
+        if asc.enabled:
+            replica_plan, warm_plan, asc_stats = plan_replicas(
+                asc, util1, ci_mean, site.n_replicas)
+        else:
+            replica_plan = np.full(n_ep, site.n_replicas, int)
+            warm_plan = np.zeros(n_ep, int)
+            asc_stats = {}
 
     # The saturation check gets a model-derived capacity floor: the
     # autoscaler's tokens_per_s is a configured estimate, and when it
@@ -281,11 +286,12 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
             float(np.mean(sub.decode_tokens)))
     else:
         cap_model = cap
-    epochs = plan_epochs(sub, bounds, day, cap, replica_plan,
-                         warm_plan=warm_plan,
-                         scale_latency_s=asc.scale_up_latency_s,
-                         drain_counts=drain_counts,
-                         sat_tokens_per_s=min(cap, cap_model))
+    with PROFILER.span("day.plan"):
+        epochs = plan_epochs(sub, bounds, day, cap, replica_plan,
+                             warm_plan=warm_plan,
+                             scale_latency_s=asc.scale_up_latency_s,
+                             drain_counts=drain_counts,
+                             sat_tokens_per_s=min(cap, cap_model))
 
     def run_window(epoch: Epoch, lo: int, hi: int):
         reqs = sub.to_requests(lo, hi)
@@ -296,12 +302,14 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
         if epoch.cold_from is not None:
             for k in range(epoch.cold_from, epoch.n_replicas):
                 ls.clocks[k] = epoch.t0 + epoch.scale_latency_s
-        drive([ls], ls.add, reqs)
+        drive([ls], ls.add, reqs, probe=probe)
         return ls.stage_log(), reqs
 
     force_exact = day.mode == "event_loop"
-    evals = [evaluate_epoch(ep, sub, day, run_window,
-                            force_exact=force_exact) for ep in epochs]
+    with PROFILER.span("day.epoch_eval"):
+        evals = [evaluate_epoch(ep, sub, day, run_window,
+                                force_exact=force_exact, probe=probe)
+                 for ep in epochs]
     trace = concat_traces([ev.trace for ev in evals])
 
     # ---- per-replica energy accounting (see module docstring) ----
@@ -370,7 +378,18 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
                               soc_min=site.soc_min,
                               soc_max=site.soc_max),
         step_s=res_s)
-    cos = run_cosim(load, solar, ci, grid_cfg)
+    with PROFILER.span("day.cosim"):
+        cos = run_cosim(load, solar, ci, grid_cfg)
+
+    if probe is not None:
+        # powered devices step at epoch starts (the autoscale plan),
+        # not at in-drive scale events — day replica counts are planned
+        probe.on_requests(sub.arrival_s, sub.ready_s)
+        probe.on_site_rollup(
+            site=0, name=site.name, trace=trace, device=site.device,
+            row_devices=tp, pue=pue, ci=ci,
+            device_signal=(bounds[:-1], powered.astype(np.float64)),
+            t_end_s=t_end)
 
     return DaySiteResult(
         site=site, stream=sub, epochs=epochs, evals=evals, trace=trace,
@@ -381,12 +400,17 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
         autoscale=asc_stats)
 
 
-def run_fleet_day(cfg: FleetConfig) -> DayResult:
-    """Simulate a whole day of the fleet under ``cfg.day``."""
+def run_fleet_day(cfg: FleetConfig, probe=None) -> DayResult:
+    """Simulate a whole day of the fleet under ``cfg.day``.
+
+    ``probe`` (``repro.obs.Probe``) observes each site's epoch
+    evaluations, event-stepped stages and the per-site Eq. 1-5 rollup;
+    probe-off runs are bitwise identical."""
     day: Optional[DayConfig] = cfg.day
     if day is None:
         raise ValueError("run_fleet_day needs cfg.day (a DayConfig)")
-    stream = generate_stream(cfg.workload)
+    with PROFILER.span("day.workload"):
+        stream = generate_stream(cfg.workload)
     wl = cfg.workload
     defer_slack = (wl.deferrable_deadline_s
                    if wl.deferrable_frac > 0.0 else 0.0)
@@ -401,14 +425,16 @@ def run_fleet_day(cfg: FleetConfig) -> DayResult:
                  "deferral_max_s": 0.0}
     drain = np.zeros(len(bounds) - 1)
     if sched.policy != "immediate" and wl.deferrable_frac > 0.0:
-        forecaster = make_forecaster(sched.forecaster,
-                                     **sched.forecaster_params)
-        forecast = fleet_ci_forecast(forecaster, cis, stat=sched.ci_stat)
-        drain, adm_stats = epoch_deferral(
-            stream, bounds, forecast,
-            margin=float(sched.policy_params.get("margin", 0.02)),
-            service_margin_s=float(
-                sched.policy_params.get("service_margin_s", 120.0)))
+        with PROFILER.span("day.admission"):
+            forecaster = make_forecaster(sched.forecaster,
+                                         **sched.forecaster_params)
+            forecast = fleet_ci_forecast(forecaster, cis,
+                                         stat=sched.ci_stat)
+            drain, adm_stats = epoch_deferral(
+                stream, bounds, forecast,
+                margin=float(sched.policy_params.get("margin", 0.02)),
+                service_margin_s=float(
+                    sched.policy_params.get("service_margin_s", 120.0)))
 
     # trim trailing all-empty epochs (deferral slack the gate never
     # used) so idle accounting doesn't charge hours of dead air
@@ -434,8 +460,13 @@ def run_fleet_day(cfg: FleetConfig) -> DayResult:
                 np.searchsorted(bounds, sub.ready_s[released],
                                 side="right") - 1,
                 0, len(bounds) - 2), 1.0)
+        site_probe = None
+        if probe is not None:
+            from repro.obs.probe import SiteIndexProbe
+            site_probe = SiteIndexProbe(probe, i)
         sites_out.append(_run_site_day(cfg, site, sub, bounds,
-                                       site_drain, cis[i]))
+                                       site_drain, cis[i],
+                                       probe=site_probe))
 
     duration = max([s.trace.total_duration() for s in sites_out]
                    + [float(bounds[-1])])

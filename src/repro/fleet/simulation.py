@@ -73,6 +73,11 @@ class LoopSite:
         # stay O(sites), not O(outstanding requests)
         self._outstanding_tokens = 0
         self.trace = StageTraceBuilder()
+        # opt-in observability (repro.obs): the fleet driver points
+        # these at its probe so the autoscale controller can report
+        # transitions; None (default) keeps every hook dead
+        self.probe = None
+        self.site_index = 0
 
     def add(self, req: Request):
         """Route one request into the site. Replicas that were idle
@@ -107,7 +112,7 @@ class LoopSite:
 
 
 def drive(sites: List[LoopSite], route, requests: List[Request],
-          max_sim_s: float = 10_000_000.0) -> None:
+          max_sim_s: float = 10_000_000.0, probe=None) -> None:
     """THE continuous-batching event loop, shared by the single-site
     simulator and the fleet driver.
 
@@ -119,6 +124,10 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
     (idle replicas don't hold admission back; ``LoopSite.add``
     fast-forwards them, so no request is ever served before it is
     ready).
+
+    ``probe`` (``repro.obs.Probe``) observes committed stages; it is
+    read-only and costs nothing when None — probe-off runs are bitwise
+    identical to probe-attached ones (the neutrality contract).
     """
     pending = sorted(requests, key=lambda r: r.ready_s)
     pi = 0
@@ -184,6 +193,8 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
                 score_flops=f_score,
                 kv_rw_bytes=kv_rw)
 
+        if probe is not None:
+            probe.on_stage(now, cost.t_total, s, i, rep, npt, ndec, bs)
         now += cost.t_total
         st.clocks[i] = now
         st.note_done(rep.complete_iteration(prefills, decodes, now))
@@ -374,7 +385,11 @@ class FleetResult:
 
 
 def run_fleet_simulation(cfg: FleetConfig,
-                         max_sim_s: float = 10_000_000.0) -> FleetResult:
+                         max_sim_s: float = 10_000_000.0,
+                         probe=None) -> FleetResult:
+    """``probe`` (``repro.obs.Probe``, optional) observes routing,
+    stages, autoscaling and the per-site rollup; it never feeds back
+    into the simulation (probe-off == probe-on, bitwise)."""
     requests = generate(cfg.workload)
     wl = cfg.workload
     defer_slack = (wl.deferrable_deadline_s
@@ -397,15 +412,22 @@ def run_fleet_simulation(cfg: FleetConfig,
     router = make_router(cfg.router, len(sites), **cfg.router_params)
     assignments = np.full(len(requests), -1, np.int32)
 
+    if probe is not None:
+        for idx, st in enumerate(sites):
+            st.probe = probe
+            st.site_index = idx
+
     def route(req: Request):
         # the geo decision sees each site's CI at the moment the
         # request becomes routable (its admission release; == arrival
         # under immediate admission)
         target = router.choose(req, req.ready_s, sites)
         assignments[req.rid] = target
+        if probe is not None:
+            probe.on_route(req.ready_s, req.rid, target)
         sites[target].add(req)
 
-    drive(sites, route, requests, max_sim_s)
+    drive(sites, route, requests, max_sim_s, probe=probe)
 
     # ---- roll up: Eq. 2-3 energy, Eq. 5 profiles, microgrid co-sim ----
     stage_logs = [st.stage_log() for st in sites]
@@ -419,7 +441,7 @@ def run_fleet_simulation(cfg: FleetConfig,
             st.ci = ci_trace_signal(st.site.ci_trace,
                                     t_end / 3600.0 + 0.5)
     results = []
-    for st, log in zip(sites, stage_logs):
+    for si, (st, log) in enumerate(zip(sites, stage_logs)):
         pm = PowerModel(st.site.device)
         energy = operational_energy_trace(log, pm,
                                           n_devices=st.site.n_devices,
@@ -453,6 +475,17 @@ def run_fleet_simulation(cfg: FleetConfig,
             carbon_active_g=active_g,
             autoscale=(st.controller.stats()
                        if st.controller is not None else {})))
+        if probe is not None:
+            probe.on_site_rollup(
+                site=si, name=st.site.name, trace=log,
+                device=st.site.device, row_devices=st.site.n_devices,
+                pue=cfg.pue, ci=st.ci, total_devices=st.site.n_devices,
+                device_signal=dev_sig, t_end_s=t_end)
+
+    if probe is not None:
+        probe.on_requests(
+            np.asarray([r.arrival_s for r in requests], np.float64),
+            np.asarray([r.ready_s for r in requests], np.float64))
 
     return FleetResult(cfg=cfg, sites=results, requests=requests,
                        assignments=assignments,

@@ -24,7 +24,12 @@ import time
 import traceback
 from pathlib import Path
 
+from repro.obs.log import configure as configure_logging
+from repro.obs.log import get_logger
+
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_log = get_logger("repro.launch.dryrun")
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -113,20 +118,20 @@ def orchestrate(multi_pod: bool, attn_impl: str, only_missing: bool = True,
         if only_missing and out_path.exists():
             rec = json.loads(out_path.read_text())
             if rec.get("runnable") is False or "compile_s" in rec or "error" not in rec:
-                print(f"[skip existing] {arch} {shape_name}")
+                _log.info("[skip existing] %s %s", arch, shape_name)
                 continue
         if not ok:
             out_path.write_text(json.dumps(
                 {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
                  "runnable": False, "reason": reason}, indent=1))
-            print(f"[skip n/a] {arch} {shape_name}: {reason}")
+            _log.info("[skip n/a] %s %s: %s", arch, shape_name, reason)
             continue
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape_name,
                "--attn-impl", attn_impl]
         if multi_pod:
             cmd.append("--multi-pod")
-        print(f"[run] {arch} {shape_name} ({mesh_tag})", flush=True)
+        _log.info("[run] %s %s (%s)", arch, shape_name, mesh_tag)
         t0 = time.time()
         try:
             r = subprocess.run(cmd, capture_output=True, text=True,
@@ -137,12 +142,12 @@ def orchestrate(multi_pod: bool, attn_impl: str, only_missing: bool = True,
                 out_path.write_text(json.dumps(
                     {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
                      "runnable": True, "error": r.stderr[-3000:]}, indent=1))
-                print(f"  FAILED in {time.time()-t0:.0f}s")
+                _log.warning("FAILED in %.0fs", time.time() - t0)
             else:
-                print(f"  ok in {time.time()-t0:.0f}s")
+                _log.info("ok in %.0fs", time.time() - t0)
         except subprocess.TimeoutExpired:
             failures.append((arch, shape_name, "timeout"))
-            print("  TIMEOUT")
+            _log.warning("TIMEOUT")
     return failures
 
 
@@ -156,7 +161,10 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default="baseline")
     ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("-v", "--verbose", action="count", default=0)
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
+    configure_logging(verbosity=(-1 if args.quiet else args.verbose))
 
     if args.all:
         fails = orchestrate(args.multi_pod, args.attn_impl,

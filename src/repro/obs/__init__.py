@@ -1,0 +1,34 @@
+"""Dual-clock observability: sim-time flight recorder + wall-clock
+sweep profiler (``python -m repro.obs`` for the record CLI).
+
+Two clocks, one contract:
+
+* **sim-time** — the opt-in ``Probe`` protocol threaded through the
+  event loop and the fleet/day drivers; ``FlightRecorder`` logs queue
+  depth, batch occupancy, KV usage, routing, autoscaling, epoch
+  evaluations and per-bin Eq. 1-5 power/CI/carbon timelines. Probe-off
+  runs are bitwise identical to un-instrumented ones (neutrality,
+  pinned by tests/test_obs.py).
+* **wall-clock** — the ``SpanProfiler`` (module-global ``PROFILER``)
+  over the sweep pipeline: cache lookups, trace grouping, event-loop
+  runs, stacked passes, device-mode jit compile vs execute, worker
+  fan-out.
+
+Both serialize to Perfetto-viewable Chrome trace-event JSON and tidy
+CSV (``repro.obs.chrometrace``).
+"""
+from repro.obs.chrometrace import (chrome_trace_events, write_chrome_trace,
+                                   write_csvs)
+from repro.obs.log import configure as configure_logging
+from repro.obs.log import get_logger
+from repro.obs.probe import NULL_PROBE, NullProbe, Probe, SiteIndexProbe
+from repro.obs.recorder import ColumnBuilder, FlightRecorder
+from repro.obs.spans import PROFILER, SpanProfiler
+
+__all__ = [
+    "Probe", "NullProbe", "NULL_PROBE", "SiteIndexProbe",
+    "FlightRecorder", "ColumnBuilder",
+    "SpanProfiler", "PROFILER",
+    "chrome_trace_events", "write_chrome_trace", "write_csvs",
+    "get_logger", "configure_logging",
+]

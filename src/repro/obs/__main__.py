@@ -1,0 +1,132 @@
+"""Flight-recorder CLI: run one sweep scenario with full dual-clock
+instrumentation and export Perfetto-viewable traces.
+
+Examples:
+
+    # record the day-smoke config's flight trace + CSVs
+    PYTHONPATH=src python -m repro.obs record day --smoke \\
+        --out results/obs/day_trace.json --csv-dir results/obs
+
+    # list recordable scenarios
+    PYTHONPATH=src python -m repro.obs list --smoke
+
+``record`` executes one scenario from the sweep registry with a
+``FlightRecorder`` attached and the wall-clock ``SpanProfiler``
+enabled, then writes both clocks to one Chrome trace-event JSON
+(open it at https://ui.perfetto.dev) and, optionally, tidy CSVs.
+The probe only observes: the scenario's metrics are bit-identical to
+an unrecorded run (tests/test_obs.py pins this).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.obs.chrometrace import write_chrome_trace, write_csvs
+from repro.obs.log import configure, get_logger
+from repro.obs.recorder import FlightRecorder
+from repro.obs.spans import PROFILER
+
+_log = get_logger("repro.obs")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Sim-time flight recorder + wall-clock profiler "
+                    "over single sweep scenarios.")
+    p.add_argument("-v", "--verbose", action="count", default=0)
+    p.add_argument("--quiet", action="store_true")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    ls = sub.add_parser("list", help="list recordable sweep scenarios")
+    ls.add_argument("--smoke", action="store_true")
+
+    rec = sub.add_parser("record",
+                         help="record one scenario's flight trace")
+    rec.add_argument("sweep", metavar="SWEEP",
+                     help="sweep name from the registry "
+                          "(python -m repro.obs list)")
+    rec.add_argument("--index", type=int, default=0,
+                     help="scenario index within the sweep (default 0)")
+    rec.add_argument("--smoke", action="store_true",
+                     help="smoke-scale grids (CI mode)")
+    rec.add_argument("--n-requests", type=int, default=None)
+    rec.add_argument("--resolution", type=float, default=60.0,
+                     help="timeline bin width in sim seconds "
+                          "(default 60; observer-only, never changes "
+                          "the simulation)")
+    rec.add_argument("--out", type=Path, default=None,
+                     help="Chrome trace JSON path (default "
+                          "results/obs/<sweep><index>.trace.json)")
+    rec.add_argument("--csv-dir", type=Path, default=None,
+                     help="also export tidy CSVs into this directory")
+    return p
+
+
+def _cmd_list(args) -> int:
+    from repro.sweep.scenarios import SWEEPS
+    for name, sweep in SWEEPS.items():
+        scs = sweep.build(args.smoke)
+        print(f"{name:8s} {len(scs):3d} scenario(s)  {sweep.title}")
+    return 0
+
+
+def _cmd_record(args) -> int:
+    from repro.sweep.runner import execute_scenario
+    from repro.sweep.scenarios import SWEEPS
+
+    if args.sweep not in SWEEPS:
+        print(f"unknown sweep {args.sweep!r}; available: "
+              f"{', '.join(SWEEPS)}", file=sys.stderr)
+        return 2
+    scenarios = SWEEPS[args.sweep].build(args.smoke,
+                                         n_requests=args.n_requests)
+    if not 0 <= args.index < len(scenarios):
+        print(f"--index {args.index} out of range "
+              f"(sweep has {len(scenarios)} scenarios)", file=sys.stderr)
+        return 2
+    sc = scenarios[args.index]
+    _log.info("recording %s (scenario %d/%d: %s)", args.sweep,
+              args.index, len(scenarios), sc.tag)
+
+    recorder = FlightRecorder(resolution_s=args.resolution)
+    PROFILER.enable(reset=True)
+    try:
+        with PROFILER.span("execute_scenario"):
+            record = execute_scenario(sc, probe=recorder)
+    finally:
+        PROFILER.disable()
+
+    out = args.out or (Path("results") / "obs"
+                       / f"{args.sweep}{args.index}.trace.json")
+    info = write_chrome_trace(out, recorder, PROFILER)
+    counts = recorder.counts()
+    summary = {
+        "sweep": args.sweep, "index": args.index,
+        "scenario": record["scenario"], "key": record["key"],
+        **counts,
+        "has_carbon_timeline": any("carbon_g" in t for t in
+                                   recorder.timelines.values()),
+        "trace": info["path"], "trace_events": info["n_events"],
+    }
+    if args.csv_dir is not None:
+        paths = write_csvs(args.csv_dir, recorder, PROFILER)
+        summary["csv_files"] = [str(p) for p in paths]
+    print(json.dumps(summary, indent=1))
+    _log.info("open %s at https://ui.perfetto.dev", info["path"])
+    return 0
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    configure(verbosity=(-1 if args.quiet else args.verbose))
+    if args.cmd == "list":
+        return _cmd_list(args)
+    return _cmd_record(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Structured stderr logging for the repro CLIs.
+
+Library code logs through ``get_logger(...)`` (children of the
+``repro`` logger) and stays silent unless a CLI entry point calls
+``configure()`` — matching the historical behavior where progress
+output only existed when a caller passed a ``progress=`` callback.
+Diagnostics go to **stderr** so the machine-readable stdout lines the
+CI jobs grep (sweep summary counts, JSON results) stay clean.
+
+Verbosity mapping (the CLIs' ``-v`` / ``--quiet`` flags):
+``-1`` -> WARNING, ``0`` -> INFO (default), ``>= 1`` -> DEBUG.
+"""
+from __future__ import annotations
+
+import logging
+import sys
+
+_ROOT_NAME = "repro"
+_FORMAT = "%(asctime)s %(levelname).1s %(name)s: %(message)s"
+
+
+def get_logger(name: str = _ROOT_NAME) -> logging.Logger:
+    """A logger under the ``repro`` hierarchy (silent until a CLI
+    calls ``configure()``)."""
+    if name != _ROOT_NAME and not name.startswith(_ROOT_NAME + "."):
+        name = f"{_ROOT_NAME}.{name}"
+    return logging.getLogger(name)
+
+
+def configure(verbosity: int = 0, stream=None) -> logging.Logger:
+    """Install (or replace) the stderr handler on the ``repro`` root
+    logger. Idempotent: repeated calls reconfigure rather than stack
+    handlers."""
+    root = logging.getLogger(_ROOT_NAME)
+    for h in list(root.handlers):
+        root.removeHandler(h)
+    handler = logging.StreamHandler(stream if stream is not None
+                                    else sys.stderr)
+    handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+    root.addHandler(handler)
+    if verbosity < 0:
+        root.setLevel(logging.WARNING)
+    elif verbosity == 0:
+        root.setLevel(logging.INFO)
+    else:
+        root.setLevel(logging.DEBUG)
+    root.propagate = False
+    return root

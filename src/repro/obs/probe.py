@@ -1,0 +1,118 @@
+"""The sim-time probe protocol.
+
+A ``Probe`` is an *observer* of the simulation: the event loop
+(``repro.fleet.simulation.drive``) and the drivers built on it call
+its hooks at well-defined points, and the probe only ever reads the
+state it is handed — it must never mutate schedulers, clocks or
+requests. Probe-off runs (``probe=None``, the default everywhere) skip
+every hook behind a single ``if probe is not None`` branch, so they
+stay bitwise identical to an un-instrumented build; probe-attached
+runs must produce the exact same simulation output (the neutrality
+contract, pinned by tests/test_obs.py).
+
+Hook taxonomy:
+
+* **hot-loop hooks** fire inside the event loop (``on_stage``,
+  ``on_route``, ``on_scale``) and are kept cheap: the loop passes the
+  live scheduler object instead of precomputed aggregates, so a no-op
+  probe costs one method call per stage;
+* **finalize hooks** fire once per run/site after the loop drains
+  (``on_requests``, ``on_epoch_eval``, ``on_site_rollup``) and hand
+  the probe the read-only rollup inputs (stage trace, power model
+  name, CI signal) it needs to derive Eq. 1-5 timelines.
+
+``NullProbe`` implements every hook as a no-op — attach it to measure
+the pure dispatch overhead of instrumentation (what
+``benchmarks/perf_sweep.py --check-obs`` bounds at <= 2%).
+"""
+from __future__ import annotations
+
+
+class Probe:
+    """Base probe: every hook is a no-op. Subclass and override what
+    you need; unimplemented hooks stay free."""
+
+    # ---- hot-loop hooks (sim-time) ----
+
+    def on_stage(self, t_s: float, dur_s: float, site: int, replica: int,
+                 scheduler, n_prefill: int, n_decode: int,
+                 batch_size: int) -> None:
+        """One batch iteration committed at sim-time ``t_s`` on
+        ``(site, replica)``. ``scheduler`` is the live
+        ``ReplicaScheduler`` — read ``len(scheduler.waiting)`` /
+        ``len(scheduler.running)`` / ``scheduler.kv_tokens`` here, do
+        not hold a reference past the call."""
+
+    def on_route(self, t_s: float, rid: int, site: int) -> None:
+        """Request ``rid`` routed to ``site`` at its ready time."""
+
+    def on_scale(self, t_s: float, site: int, n_active: int,
+                 n_warm: int, kind: str) -> None:
+        """Autoscaler transition (``repro.fleet.autoscale``)."""
+
+    # ---- finalize hooks (once per run / site) ----
+
+    def on_requests(self, arrival_s, ready_s, site: int = -1) -> None:
+        """Arrival/release arrays after admission assignment — the
+        deferral backlog timeline derives from (arrival, ready)
+        pairs."""
+
+    def on_epoch_eval(self, site: int, ev) -> None:
+        """One epoch's ``EpochEval`` from the day driver / hybrid."""
+
+    def on_site_rollup(self, site: int, name: str, trace, device: str,
+                       row_devices: float, pue: float = 1.0, ci=None,
+                       total_devices=None, device_signal=None,
+                       t_end_s=None) -> None:
+        """Finalize-time timeline inputs for one site: the full
+        ``StageTrace``, the device key (-> ``PowerModel``), the device
+        count each row's per-device power applies to
+        (``row_devices``), the PUE, the CI (``Signal`` or static
+        float), the total/powered device count for idle fill, and the
+        horizon. See ``FlightRecorder.on_site_rollup``."""
+
+
+class NullProbe(Probe):
+    """Explicitly-attached no-op probe: exercises every hook dispatch
+    without recording anything — the obs-overhead baseline."""
+
+
+#: shared no-op instance (probes are stateless unless they record)
+NULL_PROBE = NullProbe()
+
+
+class SiteIndexProbe(Probe):
+    """Re-tags the ``site`` index of every hook before forwarding to
+    an inner probe. The day driver runs each site's epoch windows
+    through single-site ``drive`` calls (which always report site 0);
+    wrapping the recorder per site restores fleet-level indices."""
+
+    def __init__(self, inner: Probe, site: int):
+        self.inner = inner
+        self.site = site
+
+    def on_stage(self, t_s, dur_s, site, replica, scheduler, n_prefill,
+                 n_decode, batch_size):
+        self.inner.on_stage(t_s, dur_s, self.site, replica, scheduler,
+                            n_prefill, n_decode, batch_size)
+
+    def on_route(self, t_s, rid, site):
+        self.inner.on_route(t_s, rid, self.site)
+
+    def on_scale(self, t_s, site, n_active, n_warm, kind):
+        self.inner.on_scale(t_s, self.site, n_active, n_warm, kind)
+
+    def on_requests(self, arrival_s, ready_s, site=-1):
+        self.inner.on_requests(arrival_s, ready_s, site=self.site)
+
+    def on_epoch_eval(self, site, ev):
+        self.inner.on_epoch_eval(self.site, ev)
+
+    def on_site_rollup(self, site, name, trace, device, row_devices,
+                       pue=1.0, ci=None, total_devices=None,
+                       device_signal=None, t_end_s=None):
+        self.inner.on_site_rollup(self.site, name, trace, device,
+                                  row_devices, pue=pue, ci=ci,
+                                  total_devices=total_devices,
+                                  device_signal=device_signal,
+                                  t_end_s=t_end_s)

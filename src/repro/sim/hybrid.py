@@ -207,8 +207,8 @@ def _tile_trace(trace: StageTrace, mask: np.ndarray, t_w: float,
 
 
 def evaluate_epoch(epoch: Epoch, stream: ArrivalStream, day: DayConfig,
-                   run_window: Callable, force_exact: bool = False
-                   ) -> EpochEval:
+                   run_window: Callable, force_exact: bool = False,
+                   probe=None) -> EpochEval:
     """Evaluate one epoch. ``run_window(epoch, lo, hi)`` must run the
     exact event loop over stream rows [lo, hi) with fresh replicas
     (clocked from the epoch start) and return ``(StageTrace,
@@ -217,7 +217,16 @@ def evaluate_epoch(epoch: Epoch, stream: ArrivalStream, day: DayConfig,
     A fluid epoch whose pilot budget covers every arrival short-
     circuits to the exact run — tiling a complete sample is the
     identity, so hybrid == event_loop bitwise on such epochs.
+
+    ``probe`` (``repro.obs.Probe``) receives ``on_epoch_eval(0, ev)``
+    for every evaluation (site 0 — the day driver re-tags through
+    ``SiteIndexProbe``); it never affects the result.
     """
+    def _emit(ev: EpochEval) -> EpochEval:
+        if probe is not None:
+            probe.on_epoch_eval(0, ev)
+        return ev
+
     n = epoch.i1 - epoch.i0
     pilot_n = day.warmup_requests + day.pilot_requests
     skip, pilot_end = day.warmup_requests, pilot_n
@@ -239,10 +248,10 @@ def evaluate_epoch(epoch: Epoch, stream: ArrivalStream, day: DayConfig,
     if exact:
         trace, reqs = run_window(epoch, epoch.i0, epoch.i1)
         ttft, e2e = _latencies(reqs)
-        return EpochEval(epoch, trace, ttft, e2e, 1.0, n, n,
-                         executed=EXACT if (force_exact or
-                                            epoch.planned == EXACT)
-                         else FLUID)
+        return _emit(EpochEval(epoch, trace, ttft, e2e, 1.0, n, n,
+                               executed=EXACT if (force_exact or
+                                                  epoch.planned == EXACT)
+                               else FLUID))
 
     trace, reqs = run_window(epoch, epoch.i0, epoch.i0 + pilot_end)
     t_w = float(reqs[skip].ready_s)
@@ -252,14 +261,14 @@ def evaluate_epoch(epoch: Epoch, stream: ArrivalStream, day: DayConfig,
         # degenerate pilot (clumped arrivals): fall back to exact
         trace, reqs = run_window(epoch, epoch.i0, epoch.i1)
         ttft, e2e = _latencies(reqs)
-        return EpochEval(epoch, trace, ttft, e2e, 1.0, n, n,
-                         executed=FLUID)
+        return _emit(EpochEval(epoch, trace, ttft, e2e, 1.0, n, n,
+                               executed=FLUID))
     synth = _tile_trace(trace, mask, t_w, t_p - t_w, epoch.t0, epoch.t1)
     ttft, e2e = _latencies(reqs, skip=skip)
     n_sample = len(reqs) - skip
-    return EpochEval(epoch, synth, ttft, e2e,
-                     weight=n / max(n_sample, 1), n_requests=n,
-                     n_simulated=len(reqs), executed=FLUID)
+    return _emit(EpochEval(epoch, synth, ttft, e2e,
+                           weight=n / max(n_sample, 1), n_requests=n,
+                           n_simulated=len(reqs), executed=FLUID))
 
 
 def concat_traces(traces: List[StageTrace]) -> StageTrace:

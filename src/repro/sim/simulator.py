@@ -94,7 +94,7 @@ class SimResult:
 
 
 def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0,
-                   router=None) -> SimResult:
+                   router=None, probe=None) -> SimResult:
     """Single-site simulation — the trivial fleet.
 
     The event loop lives in ``repro.fleet.simulation.drive``; this
@@ -103,7 +103,8 @@ def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0,
     and a ``replicas`` list of ``ReplicaScheduler``); when injected,
     the caller owns scheduler config resolution (``auto_kv_budget`` is
     not applied). Default: round-robin over ``cfg.n_replicas`` fresh
-    replicas, the historical behavior.
+    replicas, the historical behavior. ``probe`` (``repro.obs.Probe``)
+    observes stage commits and routing; probe-off is bitwise identical.
     """
     from repro.fleet.simulation import LoopSite, drive
 
@@ -124,7 +125,18 @@ def run_simulation(cfg: SimConfig, max_sim_s: float = 10_000_000.0,
     site = LoopSite(router, cached_execution_model(cfg.model, cfg.device,
                                                    cfg.tp, cfg.pp,
                                                    cfg.execmodel), cfg.pp)
-    drive([site], site.add, requests, max_sim_s)
+    add = site.add
+    if probe is not None:
+        site.probe = probe
+
+        def add(req):
+            probe.on_route(req.ready_s, req.rid, 0)
+            site.add(req)
+    drive([site], add, requests, max_sim_s, probe=probe)
+    if probe is not None:
+        probe.on_requests(
+            np.asarray([r.arrival_s for r in requests], np.float64),
+            np.asarray([r.ready_s for r in requests], np.float64))
     return SimResult(stages=site.stage_log(), requests=requests, cfg=cfg)
 
 

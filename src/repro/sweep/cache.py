@@ -35,6 +35,10 @@ class ResultCache:
     def __init__(self, root: Optional[Path] = None):
         self.root = Path(root) if root is not None else default_cache_root()
         self._memo: dict = {}
+        # cumulative effectiveness counters (process lifetime): hits
+        # served from the in-process memo vs parsed off disk vs misses.
+        # The sweep runner snapshots deltas per run for its summary.
+        self.counters = {"memo": 0, "disk": 0, "miss": 0}
 
     def path_for(self, key: str) -> Path:
         return self.root / key[:2] / f"{key}.json"
@@ -42,16 +46,20 @@ class ResultCache:
     def get(self, key: str) -> Optional[dict]:
         memo = self._memo.get(key)
         if memo is not None:
+            self.counters["memo"] += 1
             return memo
         path = self.path_for(key)
         try:
             with open(path) as f:
                 record = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
+            self.counters["miss"] += 1
             return None
         if record.get("key") != key:        # corrupt/foreign entry
+            self.counters["miss"] += 1
             return None
         self._remember(key, record)
+        self.counters["disk"] += 1
         return record
 
     def _remember(self, key: str, record: dict) -> None:

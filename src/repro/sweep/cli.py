@@ -19,9 +19,14 @@ import sys
 import time
 from pathlib import Path
 
+from repro.obs.log import configure as configure_logging
+from repro.obs.log import get_logger
+from repro.obs.spans import PROFILER
 from repro.sweep.cache import ResultCache, default_cache_root
 from repro.sweep.report import format_table, write_outputs
 from repro.sweep.scenarios import SWEEPS, run_sweep
+
+_log = get_logger("repro.sweep")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -61,12 +66,26 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--list", action="store_true", dest="list_sweeps",
                    help="list available sweeps and exit")
     p.add_argument("--quiet", action="store_true",
-                   help="suppress per-scenario tables")
+                   help="suppress per-scenario tables and progress logs")
+    p.add_argument("-v", "--verbose", action="count", default=0,
+                   help="raise progress-log verbosity (stderr)")
+    p.add_argument("--profile", action="store_true",
+                   help="profile the sweep pipeline's wall-clock "
+                        "phases; per-phase totals print to stderr")
+    p.add_argument("--trace-out", type=Path, default=None,
+                   help="record a dual-clock Perfetto trace (sim-time "
+                        "flight recorder + wall-clock spans) to this "
+                        "Chrome trace-event JSON path; forces serial "
+                        "execution and is rejected in device mode")
+    p.add_argument("--obs-resolution", type=float, default=60.0,
+                   help="flight-recorder timeline bin width in sim "
+                        "seconds (default 60; observer-only)")
     return p
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    configure_logging(verbosity=(-1 if args.quiet else args.verbose))
 
     if args.list_sweeps:
         for name, sweep in SWEEPS.items():
@@ -91,6 +110,13 @@ def main(argv=None) -> int:
     if args.clear_cache and cache is not None:
         print(f"cleared {cache.clear()} cached scenario(s)")
 
+    probe = None
+    if args.trace_out is not None:
+        from repro.obs.recorder import FlightRecorder
+        probe = FlightRecorder(resolution_s=args.obs_resolution)
+    if args.profile or probe is not None:
+        PROFILER.enable(reset=True)
+
     failed = []
     for name in names:
         t0 = time.perf_counter()
@@ -100,7 +126,7 @@ def main(argv=None) -> int:
             records, stats, derived = run_sweep(
                 name, smoke=args.smoke, n_requests=args.n_requests,
                 workers=args.workers, cache=cache, mode=args.mode,
-                progress=lambda msg: print(f"   {msg}"))
+                probe=probe, progress=lambda msg: _log.info("%s", msg))
         except Exception as exc:           # keep sweeping, report at exit
             failed.append(name)
             print(f"   FAILED: {type(exc).__name__}: {exc}",
@@ -113,6 +139,18 @@ def main(argv=None) -> int:
         print(f"   derived: {derived}")
         print(f"   wrote {paths['csv']} {paths['json']} "
               f"({time.perf_counter() - t0:.2f}s)")
+
+    if args.profile or probe is not None:
+        PROFILER.disable()
+    if args.trace_out is not None:
+        from repro.obs.chrometrace import write_chrome_trace
+        info = write_chrome_trace(args.trace_out, probe, PROFILER)
+        print(f"   wrote trace {info['path']} "
+              f"({info['n_events']} events)")
+    if args.profile:
+        print("-- wall-clock phases --", file=sys.stderr)
+        print(PROFILER.format_aggregate(), file=sys.stderr)
+
     if failed:
         print(f"failed sweeps: {', '.join(failed)}", file=sys.stderr)
         return 1

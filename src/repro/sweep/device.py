@@ -43,6 +43,7 @@ from repro.core.carbon import reports_from_arrays
 from repro.core.energy import reports_from_sums
 from repro.core.power import DEVICES
 from repro.fleet.config import FleetConfig
+from repro.obs.spans import PROFILER
 from repro.sim.execmodel import (PARAMS_FIELDS, _Params, _roofline,
                                  cached_execution_model)
 from repro.sweep import divergence
@@ -106,6 +107,11 @@ def _group_kernel(comp_pre, comp_dec, comp_score, comp_kv,
 
 
 _PROGRAM = None
+
+# padded shapes this process has already dispatched: a new (G, S, K)
+# bucket pays XLA compilation inside the call, a seen one replays the
+# jit cache — the wall-clock profiler labels the two differently
+_SEEN_SHAPES: set = set()
 
 
 def _program():
@@ -175,7 +181,8 @@ def execute_device_grid(scenarios: Sequence[Scenario]
     if not single:
         return [r for r in records if r is not None], stats
 
-    results, sim_elapsed = _acquire_results(scenarios, single, stats)
+    with PROFILER.span("device.acquire_traces"):
+        results, sim_elapsed = _acquire_results(scenarios, single, stats)
 
     # ---- pad + ragged-stack into one (G, S) / (G, K) tensor set ----
     n_g = len(single)
@@ -216,11 +223,17 @@ def execute_device_grid(scenarios: Sequence[Scenario]
     # enable_x64 is scoped: the program traces/executes in f64 without
     # flipping the process-global default (kernel/launcher tests in the
     # same process rely on f32 defaults)
+    shape_sig = (gp, sp, kp)
+    dispatch_span = ("device.jit_compile_and_execute"
+                     if shape_sig not in _SEEN_SHAPES
+                     else "device.execute")
     with jax.experimental.enable_x64():
-        out = _program()(comp[0], comp[1], comp[2], comp[3],
-                         params, powerp, ndev, phi, pues, cis)
-        e_sum, m_sum, dur, peak, op_g, emb_g = (np.asarray(o)
-                                                for o in out)
+        with PROFILER.span(dispatch_span):
+            out = _program()(comp[0], comp[1], comp[2], comp[3],
+                             params, powerp, ndev, phi, pues, cis)
+            e_sum, m_sum, dur, peak, op_g, emb_g = tuple(
+                np.asarray(o) for o in out)
+    _SEEN_SHAPES.add(shape_sig)
 
     # ---- record assembly through the shared single-site path ----
     for gi, (g, res) in enumerate(zip(single, results)):

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.carbon import emissions
 from repro.core.power import DEVICES
 from repro.fleet.config import FleetConfig
+from repro.obs.spans import PROFILER
 from repro.sweep.cache import ResultCache
 from repro.sweep.grid import SCHEMA_VERSION, Scenario
 
@@ -100,7 +101,7 @@ POSTPROCESSORS: Dict[str, Callable] = {
 # single-scenario execution
 # --------------------------------------------------------------------------
 
-def _execute_fleet_scenario(scenario: Scenario) -> dict:
+def _execute_fleet_scenario(scenario: Scenario, probe=None) -> dict:
     """Fleet scenarios: run the multi-site simulation and report its
     per-site + fleet-total energy/carbon columns. Configs carrying a
     ``DayConfig`` dispatch to the epoch-segmented day driver
@@ -115,9 +116,11 @@ def _execute_fleet_scenario(scenario: Scenario) -> dict:
             f"post-processor {scenario.post!r} is not supported")
     t0 = time.perf_counter()
     if scenario.cfg.day is not None:
-        res = run_fleet_day(scenario.cfg)
+        with PROFILER.span("sim.fleet_day"):
+            res = run_fleet_day(scenario.cfg, probe=probe)
     else:
-        res = run_fleet_simulation(scenario.cfg)
+        with PROFILER.span("sim.fleet"):
+            res = run_fleet_simulation(scenario.cfg, probe=probe)
     cfg = scenario.cfg
     meta = {"schema": SCHEMA_VERSION,
             "elapsed_s": time.perf_counter() - t0,
@@ -216,16 +219,29 @@ def single_site_record(scenario: Scenario, metrics: Dict[str, float],
     }
 
 
-def execute_scenario(scenario: Scenario) -> dict:
-    """Run one scenario to a flat, JSON-able record (event-loop path)."""
+def execute_scenario(scenario: Scenario, probe=None) -> dict:
+    """Run one scenario to a flat, JSON-able record (event-loop path).
+
+    ``probe`` (``repro.obs.Probe``) observes the simulation and, for
+    single-site scenarios, receives the Eq. 1-5 rollup inputs (this
+    layer knows the scenario's PUE and grid CI); records stay bitwise
+    identical either way."""
     from repro.sim import energy_report, run_simulation
 
     if isinstance(scenario.cfg, FleetConfig):
-        return _execute_fleet_scenario(scenario)
+        return _execute_fleet_scenario(scenario, probe=probe)
 
     t0 = time.perf_counter()
-    res = run_simulation(scenario.cfg)
+    with PROFILER.span("sim.event_loop"):
+        res = run_simulation(scenario.cfg, probe=probe)
     rep = energy_report(res, pue=scenario.pue)
+    if probe is not None:
+        probe.on_site_rollup(
+            site=0, name=scenario.tag, trace=res.stages,
+            device=scenario.cfg.device,
+            row_devices=scenario.cfg.n_devices, pue=scenario.pue,
+            ci=scenario.grid_ci,
+            total_devices=scenario.cfg.n_devices)
     return single_site_record(scenario, single_site_metrics(res, scenario, rep),
                               t0)
 
@@ -245,6 +261,12 @@ class SweepStats:
     trace_groups: int = 0     # unique simulation traces actually driven
     event_loops: int = 0      # device mode: groups run through the loop
     replayed: int = 0         # device mode: groups shared via divergence
+    # ResultCache effectiveness over this run (lookup-phase deltas);
+    # cache_attached distinguishes a no-cache run from an all-miss one
+    cache_attached: bool = False
+    cache_memo: int = 0       # hits served from the in-process memo
+    cache_disk: int = 0       # hits parsed off disk
+    cache_miss: int = 0       # keys with no cached record
 
     def summary(self) -> str:
         groups = (f", {self.trace_groups} trace group(s)"
@@ -253,10 +275,13 @@ class SweepStats:
         shared = (f" ({self.event_loops} event loop(s), "
                   f"{self.replayed} replayed)"
                   if self.mode == "device" and self.executed else "")
+        eff = (f", cache {self.cache_memo} memo / {self.cache_disk} disk"
+               f" / {self.cache_miss} miss"
+               if self.cache_attached else "")
         return (f"{self.total} scenarios: {self.executed} executed, "
                 f"{self.cache_hits} cache hits, "
                 f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)"
-                f"{groups}{shared}")
+                f"{groups}{shared}{eff}")
 
 
 class SweepRunner:
@@ -275,16 +300,29 @@ class SweepRunner:
     ``workers > 1`` uses a spawn-context process pool (fork is unsafe
     once jax has started its threadpools). ``cache=None`` disables
     memoization entirely.
+
+    ``probe`` attaches a ``repro.obs.Probe`` to every *executed*
+    scenario (cache hits never re-simulate, so they record nothing).
+    A probe forces serial in-process execution — the recorder is
+    process-local state — and is rejected in device mode, whose
+    batched program has no event-per-stage structure to observe.
     """
 
     def __init__(self, cache: Optional[ResultCache] = None,
-                 workers: int = 1, mode: str = "vectorized"):
+                 workers: int = 1, mode: str = "vectorized",
+                 probe=None):
         if mode not in EXECUTION_MODES:
             raise ValueError(f"unknown mode {mode!r}; have "
                              f"{EXECUTION_MODES}")
+        if probe is not None and mode == "device":
+            raise ValueError(
+                "probe recording is not supported in device mode (the "
+                "batched grid program exposes no per-stage events); "
+                "use mode='vectorized' or 'event_loop'")
         self.cache = cache
         self.workers = max(1, int(workers))
         self.mode = mode
+        self.probe = probe
 
     @staticmethod
     def _rebind(record: dict, sc: Scenario) -> dict:
@@ -305,21 +343,30 @@ class SweepRunner:
         note = progress or (lambda msg: None)
         records: List[Optional[dict]] = [None] * len(scenarios)
         stats = SweepStats(total=len(scenarios), workers=self.workers,
-                           mode=self.mode)
+                           mode=self.mode,
+                           cache_attached=self.cache is not None)
 
+        c0 = dict(self.cache.counters) if self.cache is not None else {}
         misses: List[int] = []          # first index per uncached key
         dup_of: Dict[str, List[int]] = {}   # key -> later same-key idxs
-        for i, sc in enumerate(scenarios):
-            hit = self.cache.get(sc.key) if self.cache is not None else None
-            if hit is not None:
-                records[i] = self._rebind(hit, sc)
-                stats.cache_hits += 1
-            elif sc.key in dup_of:      # same config earlier in this run
-                dup_of[sc.key].append(i)
-                stats.cache_hits += 1
-            else:
-                dup_of[sc.key] = []
-                misses.append(i)
+        with PROFILER.span("cache.lookup"):
+            for i, sc in enumerate(scenarios):
+                hit = (self.cache.get(sc.key)
+                       if self.cache is not None else None)
+                if hit is not None:
+                    records[i] = self._rebind(hit, sc)
+                    stats.cache_hits += 1
+                elif sc.key in dup_of:  # same config earlier in this run
+                    dup_of[sc.key].append(i)
+                    stats.cache_hits += 1
+                else:
+                    dup_of[sc.key] = []
+                    misses.append(i)
+        if self.cache is not None:
+            c1 = self.cache.counters
+            stats.cache_memo = c1["memo"] - c0["memo"]
+            stats.cache_disk = c1["disk"] - c0["disk"]
+            stats.cache_miss = c1["miss"] - c0["miss"]
         if stats.cache_hits:
             note(f"cache: {stats.cache_hits}/{len(scenarios)} hits")
 
@@ -331,14 +378,15 @@ class SweepRunner:
                 fresh = self._run_device(todo, note, stats)
             else:
                 fresh = self._run_event_loop(todo, note)
-            for i, record in zip(misses, fresh):
-                record["meta"]["cache_hit"] = False
-                records[i] = record
-                stats.executed += 1
-                if self.cache is not None:
-                    self.cache.put(record["key"], record)
-                for j in dup_of[scenarios[i].key]:
-                    records[j] = self._rebind(record, scenarios[j])
+            with PROFILER.span("cache.store"):
+                for i, record in zip(misses, fresh):
+                    record["meta"]["cache_hit"] = False
+                    records[i] = record
+                    stats.executed += 1
+                    if self.cache is not None:
+                        self.cache.put(record["key"], record)
+                    for j in dup_of[scenarios[i].key]:
+                        records[j] = self._rebind(record, scenarios[j])
 
         stats.elapsed_s = time.perf_counter() - t0
         return [r for r in records if r is not None], stats
@@ -346,32 +394,52 @@ class SweepRunner:
     # ---- execution backends over the cache-missed scenarios ----
 
     def _run_event_loop(self, todo: List[Scenario], note) -> List[dict]:
-        if self.workers > 1 and len(todo) > 1:
+        if self.probe is None and self.workers > 1 and len(todo) > 1:
             ctx = multiprocessing.get_context("spawn")
             n = min(self.workers, len(todo))
             note(f"executing {len(todo)} scenarios on {n} processes")
-            with ProcessPoolExecutor(max_workers=n, mp_context=ctx) as pool:
+            with PROFILER.span("pool.event_loop"), \
+                    ProcessPoolExecutor(max_workers=n,
+                                        mp_context=ctx) as pool:
+                if PROFILER.enabled:
+                    outs = list(pool.map(_execute_scenario_profiled, todo))
+                    for _, agg in outs:
+                        PROFILER.merge(agg)
+                    return [rec for rec, _ in outs]
                 return list(pool.map(execute_scenario, todo))
         note(f"executing {len(todo)} scenarios serially")
-        return [execute_scenario(sc) for sc in todo]
+        return [execute_scenario(sc, probe=self.probe) for sc in todo]
 
     def _run_vectorized(self, todo: List[Scenario], note
                         ) -> Tuple[List[dict], int]:
         from repro.sweep.vectorized import (execute_scenario_group,
+                                            execute_scenario_group_profiled,
                                             group_by_trace)
-        groups = group_by_trace(todo)
+        with PROFILER.span("trace_grouping"):
+            groups = group_by_trace(todo)
         group_scs = [[todo[j] for j in g] for g in groups]
-        if self.workers > 1 and len(group_scs) > 1:
+        if self.probe is None and self.workers > 1 and len(group_scs) > 1:
             ctx = multiprocessing.get_context("spawn")
             n = min(self.workers, len(group_scs))
             note(f"executing {len(todo)} scenarios as {len(groups)} "
                  f"trace group(s) on {n} processes")
-            with ProcessPoolExecutor(max_workers=n, mp_context=ctx) as pool:
-                per_group = list(pool.map(execute_scenario_group, group_scs))
+            with PROFILER.span("pool.vectorized"), \
+                    ProcessPoolExecutor(max_workers=n,
+                                        mp_context=ctx) as pool:
+                if PROFILER.enabled:
+                    outs = list(pool.map(execute_scenario_group_profiled,
+                                         group_scs))
+                    for _, agg in outs:
+                        PROFILER.merge(agg)
+                    per_group = [recs for recs, _ in outs]
+                else:
+                    per_group = list(pool.map(execute_scenario_group,
+                                              group_scs))
         else:
             note(f"executing {len(todo)} scenarios as {len(groups)} "
                  f"trace group(s) serially")
-            per_group = [execute_scenario_group(g) for g in group_scs]
+            per_group = [execute_scenario_group(g, probe=self.probe)
+                         for g in group_scs]
         fresh: List[Optional[dict]] = [None] * len(todo)
         for idxs, recs in zip(groups, per_group):
             for j, rec in zip(idxs, recs):
@@ -383,18 +451,31 @@ class SweepRunner:
         from repro.sweep.device import execute_device_grid
         note(f"executing {len(todo)} scenarios as one device-batched "
              "grid program")
-        fresh, dstats = execute_device_grid(todo)
+        with PROFILER.span("device.grid"):
+            fresh, dstats = execute_device_grid(todo)
         stats.trace_groups = dstats.trace_groups
         stats.event_loops = dstats.event_loops
         stats.replayed = dstats.replayed
         return fresh
 
 
+def _execute_scenario_profiled(sc: Scenario) -> Tuple[dict, dict]:
+    """Pool target for profiled event-loop fan-out: runs one scenario
+    under the worker-local ``PROFILER`` and ships the per-phase
+    aggregate back for the parent's ``merge()``."""
+    PROFILER.enable(reset=True)
+    try:
+        rec = execute_scenario(sc)
+    finally:
+        PROFILER.disable()
+    return rec, PROFILER.aggregate()
+
+
 def run_scenarios(scenarios: Sequence[Scenario], workers: int = 1,
                   cache: Optional[ResultCache] = None,
                   progress: Optional[Callable[[str], None]] = None,
-                  mode: str = "vectorized"
+                  mode: str = "vectorized", probe=None
                   ) -> Tuple[List[dict], SweepStats]:
     """One-call convenience wrapper around ``SweepRunner``."""
-    return SweepRunner(cache=cache, workers=workers,
-                       mode=mode).run(scenarios, progress)
+    return SweepRunner(cache=cache, workers=workers, mode=mode,
+                       probe=probe).run(scenarios, progress)

@@ -53,10 +53,15 @@ def group_by_trace(scenarios: Sequence[Scenario]) -> List[List[int]]:
     return list(groups.values())
 
 
-def execute_scenario_group(scenarios: List[Scenario]) -> List[dict]:
+def execute_scenario_group(scenarios: List[Scenario],
+                           probe=None) -> List[dict]:
     """Execute scenarios that share one config: one event-loop run,
-    then stacked metric evaluation per scenario."""
+    then stacked metric evaluation per scenario. ``probe``
+    (``repro.obs.Probe``) observes the shared simulation and gets the
+    rollup under the *first* scenario's PUE/CI (the group shares one
+    trace; report knobs differ per scenario)."""
     from repro.core.energy import stacked_energy_reports
+    from repro.obs.spans import PROFILER
     from repro.sim import run_simulation
     from repro.sweep.runner import (_execute_fleet_scenario,
                                     shared_result_metrics,
@@ -66,32 +71,59 @@ def execute_scenario_group(scenarios: List[Scenario]) -> List[dict]:
     if isinstance(scenarios[0].cfg, FleetConfig):
         # the fleet rollup bakes CI signals and PUE into its per-site
         # co-sims — no shared-trace axis to stack; keep the fleet path
-        return [_execute_fleet_scenario(sc) for sc in scenarios]
+        return [_execute_fleet_scenario(sc, probe=probe)
+                for sc in scenarios]
 
     t0 = time.perf_counter()
     cfg = scenarios[0].cfg
-    res = run_simulation(cfg)
+    with PROFILER.span("sim.event_loop"):
+        res = run_simulation(cfg, probe=probe)
+    if probe is not None:
+        probe.on_site_rollup(
+            site=0, name=scenarios[0].tag, trace=res.stages,
+            device=cfg.device, row_devices=cfg.n_devices,
+            pue=scenarios[0].pue, ci=scenarios[0].grid_ci,
+            total_devices=cfg.n_devices)
     pm = PowerModel(cfg.device)
     shared = shared_result_metrics(res)
     sim_elapsed = time.perf_counter() - t0
-    # one array pass over the shared trace covers the whole PUE axis
-    reps = stacked_energy_reports(res.stages.mfu, res.stages.dur_s, pm,
-                                  n_devices=cfg.n_devices,
-                                  pues=[sc.pue for sc in scenarios])
-    # ... and one stacked Eq. 4 pass covers the grid-CI axis
-    carbons = emissions_batch([r.energy_wh for r in reps],
-                              [r.gpu_hours for r in reps],
-                              DEVICES[cfg.device],
-                              [sc.grid_ci for sc in scenarios])
+    with PROFILER.span("stacked_passes"):
+        # one array pass over the shared trace covers the whole PUE axis
+        reps = stacked_energy_reports(res.stages.mfu, res.stages.dur_s, pm,
+                                      n_devices=cfg.n_devices,
+                                      pues=[sc.pue for sc in scenarios])
+        # ... and one stacked Eq. 4 pass covers the grid-CI axis
+        carbons = emissions_batch([r.energy_wh for r in reps],
+                                  [r.gpu_hours for r in reps],
+                                  DEVICES[cfg.device],
+                                  [sc.grid_ci for sc in scenarios])
 
     records = []
-    for sc, rep, carbon in zip(scenarios, reps, carbons):
-        # elapsed_s = the (shared) sim + this record's own evaluation
-        # — the scenario's standalone cost, not a cumulative group sum
-        rec_t0 = time.perf_counter() - sim_elapsed
-        metrics = single_site_metrics(res, sc, rep, carbon=carbon,
-                                      shared=shared)
-        records.append(single_site_record(
-            sc, metrics, rec_t0, mode="vectorized",
-            trace_scenarios=len(scenarios)))
+    with PROFILER.span("record_assembly"):
+        for sc, rep, carbon in zip(scenarios, reps, carbons):
+            # elapsed_s = the (shared) sim + this record's own
+            # evaluation — the scenario's standalone cost, not a
+            # cumulative group sum
+            rec_t0 = time.perf_counter() - sim_elapsed
+            metrics = single_site_metrics(res, sc, rep, carbon=carbon,
+                                          shared=shared)
+            records.append(single_site_record(
+                sc, metrics, rec_t0, mode="vectorized",
+                trace_scenarios=len(scenarios)))
     return records
+
+
+def execute_scenario_group_profiled(scenarios: List[Scenario]
+                                    ) -> tuple:
+    """Pool target for profiled fan-out: run the group under the
+    worker-local ``PROFILER`` and return ``(records, aggregate)`` so
+    the parent can ``merge()`` the per-phase totals (span events
+    themselves stay worker-local — cross-process clocks don't share an
+    origin)."""
+    from repro.obs.spans import PROFILER
+    PROFILER.enable(reset=True)
+    try:
+        records = execute_scenario_group(scenarios)
+    finally:
+        PROFILER.disable()
+    return records, PROFILER.aggregate()
