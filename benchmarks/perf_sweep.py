@@ -17,21 +17,35 @@ compile cost is reported separately as ``device_first_call_s``).
 The mode runs execute under the ``repro.obs`` wall-clock profiler, so
 the bench JSON carries a ``phases`` breakdown (cache lookup, event
 loops, stacked passes, device compile vs execute). The probe-
-neutrality *cost* contract is measured too: each scenario runs
-probe-off and ``NULL_PROBE``-attached back to back (order alternating,
-so machine drift cancels at millisecond granularity), the per-side
-sums form one ratio per trial, and the median over 3 trials is
+neutrality *cost* contract is measured too: one persistent probe per
+trial side (matching how ``SweepRunner`` attaches a single probe for
+a whole sweep), each scenario timed back to back under both sides
+with alternating order so machine drift cancels pairwise, and the
+overhead estimated as median(paired deltas) / median(baseline times)
+over 3 trials — the paired-median estimator is robust to the
+scheduler-noise spikes any single sample can take. The probe cost is
+always measured on a stratified subset of the FULL-SIZE grid (even
+under ``--smoke``): the pin is a statement about production sweeps,
+and smoke scenarios are ~3-15x shorter than the grid's real
+workloads, so their percentage is dominated by per-scenario fixed
+costs (rollup, finalize, run reset) rather than the per-event audit
+scaling the pin is meant to bound. Probe-off vs ``NULL_PROBE`` is
 reported as ``obs_probe_overhead_pct`` and bounded by ``--check-obs``
-(CI pins <= 2%).
+(CI pins <= 2%); ``NULL_PROBE`` vs ``AuditProbe`` isolates the
+streaming-invariant checks from the hook dispatch both sides share —
+reported as ``audit_probe_overhead_pct`` and bounded by
+``--check-audit`` (CI pins <= 3%).
 
 Usage: python -m benchmarks.perf_sweep [--smoke] [--check MIN_SPEEDUP]
                                        [--check-device MIN_SPEEDUP]
                                        [--check-obs MAX_OVERHEAD_PCT]
+                                       [--check-audit MAX_OVERHEAD_PCT]
 """
 from __future__ import annotations
 
 import gc
 import json
+import statistics
 import sys
 import time
 from pathlib import Path
@@ -86,39 +100,65 @@ def measure(smoke: bool = False) -> dict:
                      "total_s": round(a["total_s"], 3)}
               for name, a in sorted(PROFILER.aggregate().items())}
 
-    # obs-neutrality cost: a no-op probe attached to every event-loop
-    # scenario vs probe-off. The true overhead (~0.4%: one no-op
-    # method call per stage/route event) sits far below the machine
-    # noise of any whole-pass timing, so the comparison interleaves at
-    # *scenario* granularity — each scenario executes probe-off and
-    # probe-on back to back (alternating order to cancel warm-cache
-    # bias), the per-side times sum into two buckets whose ~5 ms
-    # samples see near-identical machine state, and the median bucket
-    # ratio over 3 trials is the reported overhead. The timed runs
-    # above already warmed the execution-model caches + jit.
+    # probe-cost protocol: a probe's true per-scenario cost (tens of
+    # microseconds) sits far below the machine noise of any whole-pass
+    # timing, so each scenario executes under both trial sides back to
+    # back (alternating order to cancel warm-cache bias) and the two
+    # samples of a pair see near-identical machine state. One
+    # persistent probe instance serves a whole trial side — matching
+    # how SweepRunner attaches a single probe for an entire sweep
+    # (execute_scenario marks each scenario via on_run_begin). The
+    # cost set is a stratified subset of the full-size grid (see the
+    # module docstring for why smoke scenarios misprice the probes).
     from repro.sweep.runner import execute_scenario
 
-    def _obs_trial():
+    cost_source = scenarios if not smoke else SWEEPS["perf"].build(False)
+    stride = max(1, len(cost_source) // 32)
+    cost_set = cost_source[::stride][:32]
+    for sc in cost_set:                 # warm the jit/exec caches
+        execute_scenario(sc, probe=None)
+
+    def _paired_trial(base_probe, test_probe):
         gc.collect()
-        t_off = t_on = 0.0
-        for k, sc in enumerate(scenarios):
-            order = ((None, NULL_PROBE) if k % 2 == 0
-                     else (NULL_PROBE, None))
-            for probe in order:
+        base_ts, test_ts = [], []
+        for k, sc in enumerate(cost_set):
+            pair = ((base_probe, test_probe) if k % 2 == 0
+                    else (test_probe, base_probe))
+            for probe in pair:
                 t0 = time.perf_counter()
                 execute_scenario(sc, probe=probe)
                 dt = time.perf_counter() - t0
-                if probe is None:
-                    t_off += dt
-                else:
-                    t_on += dt
-        return t_off, t_on
+                (base_ts if probe is base_probe else test_ts).append(dt)
+        return base_ts, test_ts
 
-    trials = [_obs_trial() for _ in range(3)]
-    obs_off_s = min(t[0] for t in trials)
-    obs_on_s = min(t[1] for t in trials)
-    ratios = sorted(on / off for off, on in trials)
-    obs_overhead_pct = (ratios[len(ratios) // 2] - 1.0) * 100.0
+    def _overhead_pct(trials):
+        # median-of-pairs: each scenario pair contributes one delta,
+        # and the median over all pairs (3 trials x grid) is immune to
+        # the scheduler-noise spikes that dominate sum-of-side ratios;
+        # normalizing by the median baseline scenario yields the pct
+        base_all = [b for bt, _ in trials for b in bt]
+        delta_all = [t - b for bt, tt in trials
+                     for b, t in zip(bt, tt)]
+        return (statistics.median(delta_all)
+                / statistics.median(base_all) * 100.0)
+
+    # obs-neutrality cost: NULL_PROBE (every hook dispatched, empty
+    # bodies) vs probe-off
+    obs_trials = [_paired_trial(None, NULL_PROBE) for _ in range(3)]
+    obs_off_s = min(sum(bt) for bt, _ in obs_trials)
+    obs_on_s = min(sum(tt) for _, tt in obs_trials)
+    obs_overhead_pct = _overhead_pct(obs_trials)
+
+    # audit cost: the streaming invariant checks vs the no-op probe
+    # (the NULL_PROBE baseline isolates the check bodies, not the
+    # hook dispatch both sides share); a fresh auditor per trial so
+    # report state never accretes across trials
+    from repro.obs.audit import AuditProbe
+
+    audit_trials = [_paired_trial(NULL_PROBE, AuditProbe())
+                    for _ in range(3)]
+    audit_s = min(sum(tt) for _, tt in audit_trials)
+    audit_overhead_pct = _overhead_pct(audit_trials)
 
     bit_identical = all(a["metrics"] == b["metrics"]
                         for a, b in zip(ev_records, ve_records))
@@ -144,9 +184,12 @@ def measure(smoke: bool = False) -> dict:
         "bit_identical": bit_identical,
         "device_max_rel_err": device_max_rel_err,
         "device_rtol": DEVICE_MODE_RTOL,
+        "probe_cost_scenarios": len(cost_set),
         "obs_probe_off_s": round(obs_off_s, 3),
         "obs_null_probe_s": round(obs_on_s, 3),
         "obs_probe_overhead_pct": round(obs_overhead_pct, 2),
+        "audit_probe_s": round(audit_s, 3),
+        "audit_probe_overhead_pct": round(audit_overhead_pct, 2),
         "phases": phases,
     }
 
@@ -164,7 +207,9 @@ def run(smoke: bool = False):
                f"{result['n_trace_groups']}traces;"
                f"vec={result['vectorized_scenarios_per_s']}scen_per_s;"
                f"obs_overhead={result['obs_probe_overhead_pct']}%"
-               f"(target<=2)")
+               f"(target<=2);"
+               f"audit_overhead={result['audit_probe_overhead_pct']}%"
+               f"(target<=3)")
     return [result], derived, (time.time() - t0) * 1e6
 
 
@@ -183,6 +228,10 @@ def main() -> int:
     if "--check-obs" in args:
         i = args.index("--check-obs")
         check_obs = float(args[i + 1]) if i + 1 < len(args) else 2.0
+    check_audit = None
+    if "--check-audit" in args:
+        i = args.index("--check-audit")
+        check_audit = float(args[i + 1]) if i + 1 < len(args) else 3.0
     rows, derived, _ = run(smoke=smoke)
     result = rows[0]
     print(json.dumps(result, indent=1))
@@ -209,6 +258,12 @@ def main() -> int:
         print(f"FAIL: null-probe overhead "
               f"{result['obs_probe_overhead_pct']}% > allowed "
               f"{check_obs}%", file=sys.stderr)
+        return 1
+    if check_audit is not None and \
+            result["audit_probe_overhead_pct"] > check_audit:
+        print(f"FAIL: audit-probe overhead "
+              f"{result['audit_probe_overhead_pct']}% > allowed "
+              f"{check_audit}%", file=sys.stderr)
         return 1
     return 0
 

@@ -389,7 +389,12 @@ def _run_site_day(cfg: FleetConfig, site: SiteConfig,
             site=0, name=site.name, trace=trace, device=site.device,
             row_devices=tp, pue=pue, ci=ci,
             device_signal=(bounds[:-1], powered.astype(np.float64)),
-            t_end_s=t_end)
+            t_end_s=t_end,
+            energy_wh=float(ep_active_wh.sum()),
+            idle_energy_wh=float(ep_idle_wh.sum()),
+            carbon_active_g=float(ep_carbon_act.sum()),
+            carbon_idle_g=float(ep_carbon_idle.sum()),
+            cosim=dict(cos.metrics), load=load)
 
     return DaySiteResult(
         site=site, stream=sub, epochs=epochs, evals=evals, trace=trace,

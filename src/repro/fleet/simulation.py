@@ -197,7 +197,10 @@ def drive(sites: List[LoopSite], route, requests: List[Request],
             probe.on_stage(now, cost.t_total, s, i, rep, npt, ndec, bs)
         now += cost.t_total
         st.clocks[i] = now
-        st.note_done(rep.complete_iteration(prefills, decodes, now))
+        done = rep.complete_iteration(prefills, decodes, now)
+        st.note_done(done)
+        if probe is not None and done:
+            probe.on_complete(now, s, i, done)
         if now > max_sim_s:
             break
 
@@ -480,7 +483,9 @@ def run_fleet_simulation(cfg: FleetConfig,
                 site=si, name=st.site.name, trace=log,
                 device=st.site.device, row_devices=st.site.n_devices,
                 pue=cfg.pue, ci=st.ci, total_devices=st.site.n_devices,
-                device_signal=dev_sig, t_end_s=t_end)
+                device_signal=dev_sig, t_end_s=t_end,
+                energy_wh=energy.energy_wh, carbon_active_g=active_g,
+                cosim=dict(cos.metrics), load=load)
 
     if probe is not None:
         probe.on_requests(

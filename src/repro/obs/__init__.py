@@ -1,5 +1,7 @@
 """Dual-clock observability: sim-time flight recorder + wall-clock
-sweep profiler (``python -m repro.obs`` for the record CLI).
+sweep profiler, online physics-invariant auditing, and a
+first-divergence explainer (``python -m repro.obs`` for the
+record/diff CLI).
 
 Two clocks, one contract:
 
@@ -14,20 +16,42 @@ Two clocks, one contract:
   runs, stacked passes, device-mode jit compile vs execute, worker
   fan-out.
 
-Both serialize to Perfetto-viewable Chrome trace-event JSON and tidy
-CSV (``repro.obs.chrometrace``).
+On top of the probe layer:
+
+* ``AuditProbe`` (``repro.obs.audit``) streams conservation-law and
+  sanity checks — request/token conservation, Eq. 2-3 and Eq. 4-5
+  closure, KV-budget/monotonic-clock invariants, power-range,
+  autoscaler legality — into a structured ``AuditReport``; stack it
+  with a recorder via ``MultiProbe``.
+* ``repro.obs.diff`` localizes the *first* divergent (scenario,
+  stage, column) cell between two runs — sweep records, golden
+  records or flight traces — and classifies every divergence against
+  the repo's named tolerance contracts.
+
+Traces serialize to Perfetto-viewable Chrome trace-event JSON and tidy
+CSV (``repro.obs.chrometrace``); divergence reports to markdown + JSON
+under ``results/obs/divergence/``.
 """
+from repro.obs.audit import (AuditError, AuditProbe, AuditReport,
+                             AuditViolation)
 from repro.obs.chrometrace import (chrome_trace_events, write_chrome_trace,
                                    write_csvs)
+from repro.obs.diff import (DiffResult, DivergentCell, assert_golden,
+                            diff_golden, diff_records, diff_stage_tables,
+                            write_report)
 from repro.obs.log import configure as configure_logging
 from repro.obs.log import get_logger
-from repro.obs.probe import NULL_PROBE, NullProbe, Probe, SiteIndexProbe
+from repro.obs.probe import (NULL_PROBE, MultiProbe, NullProbe, Probe,
+                             SiteIndexProbe)
 from repro.obs.recorder import ColumnBuilder, FlightRecorder
 from repro.obs.spans import PROFILER, SpanProfiler
 
 __all__ = [
-    "Probe", "NullProbe", "NULL_PROBE", "SiteIndexProbe",
+    "Probe", "NullProbe", "NULL_PROBE", "MultiProbe", "SiteIndexProbe",
     "FlightRecorder", "ColumnBuilder",
+    "AuditProbe", "AuditReport", "AuditViolation", "AuditError",
+    "DiffResult", "DivergentCell", "diff_records", "diff_golden",
+    "diff_stage_tables", "assert_golden", "write_report",
     "SpanProfiler", "PROFILER",
     "chrome_trace_events", "write_chrome_trace", "write_csvs",
     "get_logger", "configure_logging",

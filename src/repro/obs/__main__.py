@@ -1,5 +1,4 @@
-"""Flight-recorder CLI: run one sweep scenario with full dual-clock
-instrumentation and export Perfetto-viewable traces.
+"""Flight-recorder + divergence-explainer CLI.
 
 Examples:
 
@@ -10,12 +9,29 @@ Examples:
     # list recordable scenarios
     PYTHONPATH=src python -m repro.obs list --smoke
 
+    # explain the first divergence between two sweep result sets
+    PYTHONPATH=src python -m repro.obs diff \\
+        results/a/fig1.json results/b/fig1.json
+
+    # golden-drift gate: ANY divergence fails (exit 1)
+    PYTHONPATH=src python -m repro.obs diff \\
+        results/sweep/fig1.json golden.json --golden
+
 ``record`` executes one scenario from the sweep registry with a
 ``FlightRecorder`` attached and the wall-clock ``SpanProfiler``
 enabled, then writes both clocks to one Chrome trace-event JSON
 (open it at https://ui.perfetto.dev) and, optionally, tidy CSVs.
 The probe only observes: the scenario's metrics are bit-identical to
 an unrecorded run (tests/test_obs.py pins this).
+
+``diff`` compares two artifacts — sweep result JSONs (a ``records``
+payload), golden/metrics dicts, or flight-trace ``stages.csv``
+exports — walks the columns in Eq. 1-5 dependency order to localize
+the *first* divergent (scenario, stage, column) cell, classifies each
+divergence against the named tolerance contracts, and writes the
+markdown + JSON report under ``results/obs/divergence/``. Exit code:
+1 when any cell is a ``regression`` (or, under ``--golden``, on any
+divergence at all), else 0.
 """
 from __future__ import annotations
 
@@ -25,6 +41,8 @@ import sys
 from pathlib import Path
 
 from repro.obs.chrometrace import write_chrome_trace, write_csvs
+from repro.obs.diff import (DIVERGENCE_DIR, diff_golden, diff_records,
+                            diff_stage_tables, write_report)
 from repro.obs.log import configure, get_logger
 from repro.obs.recorder import FlightRecorder
 from repro.obs.spans import PROFILER
@@ -63,6 +81,25 @@ def build_parser() -> argparse.ArgumentParser:
                           "results/obs/<sweep><index>.trace.json)")
     rec.add_argument("--csv-dir", type=Path, default=None,
                      help="also export tidy CSVs into this directory")
+
+    df = sub.add_parser(
+        "diff", help="localize + classify the first divergence "
+                     "between two runs")
+    df.add_argument("a", metavar="A", type=Path,
+                    help="sweep-result JSON, metrics/golden JSON, or "
+                         "stage-table CSV")
+    df.add_argument("b", metavar="B", type=Path,
+                    help="artifact to compare against (same kinds)")
+    df.add_argument("--golden", action="store_true",
+                    help="treat B as a golden record: bit-exact gate, "
+                         "exit 1 on any divergence")
+    df.add_argument("--index", type=int, default=0,
+                    help="with --golden and a records-file A: which "
+                         "record's metrics to gate (default 0)")
+    df.add_argument("--name", default="diff",
+                    help="report basename (default 'diff')")
+    df.add_argument("--report-dir", type=Path, default=None,
+                    help=f"report directory (default {DIVERGENCE_DIR})")
     return p
 
 
@@ -120,11 +157,89 @@ def _cmd_record(args) -> int:
     return 0
 
 
+def _load_artifact(path: Path):
+    """Classify + load one diff operand: ``("table", cols)`` for a
+    stage-table CSV, ``("records", list)`` for a sweep-result payload,
+    ``("metrics", dict)`` for a golden/metrics dict."""
+    import csv
+
+    import numpy as np
+    if path.suffix.lower() == ".csv":
+        with path.open(newline="") as f:
+            rows = list(csv.reader(f))
+        if not rows:
+            return "table", {}
+        header, body = rows[0], rows[1:]
+        cols = {h: np.asarray([float(r[j]) for r in body], np.float64)
+                for j, h in enumerate(header)}
+        return "table", cols
+    data = json.loads(path.read_text())
+    if isinstance(data, list):
+        return "records", data
+    if isinstance(data, dict) and isinstance(data.get("records"), list):
+        return "records", data["records"]
+    if isinstance(data, dict) and isinstance(data.get("metrics"), dict):
+        return "metrics", data["metrics"]
+    if isinstance(data, dict):
+        return "metrics", data
+    raise ValueError(f"unrecognized artifact shape in {path}")
+
+
+def _cmd_diff(args) -> int:
+    try:
+        kind_a, a = _load_artifact(args.a)
+        kind_b, b = _load_artifact(args.b)
+    except (ValueError, OSError, json.JSONDecodeError) as exc:
+        print(f"cannot load artifacts: {exc}", file=sys.stderr)
+        return 2
+    la, lb = str(args.a), str(args.b)
+    if args.golden:
+        if kind_b == "table":
+            print("--golden expects a metrics/records JSON for B",
+                  file=sys.stderr)
+            return 2
+        if kind_b == "records":
+            b = b[args.index].get("metrics", {}) \
+                if 0 <= args.index < len(b) else {}
+        if kind_a == "records":
+            if not 0 <= args.index < len(a):
+                print(f"--index {args.index} out of range "
+                      f"(A has {len(a)} records)", file=sys.stderr)
+                return 2
+            a = a[args.index].get("metrics", {})
+        elif kind_a == "table":
+            print("--golden expects a metrics/records JSON for A",
+                  file=sys.stderr)
+            return 2
+        result = diff_golden(a, b, scenario=args.name,
+                             label_a=la, label_b=lb)
+    elif kind_a != kind_b:
+        print(f"cannot compare {kind_a} ({la}) against {kind_b} ({lb})",
+              file=sys.stderr)
+        return 2
+    elif kind_a == "table":
+        result = diff_stage_tables(a, b, scenario=args.name,
+                                   label_a=la, label_b=lb)
+    elif kind_a == "records":
+        result = diff_records(a, b, label_a=la, label_b=lb)
+    else:
+        result = diff_golden(a, b, scenario=args.name,
+                             label_a=la, label_b=lb)
+    paths = write_report(result, args.name, outdir=args.report_dir)
+    print(result.summary())
+    print(f"report: {paths['md']}")
+    if args.golden:
+        return 0 if result.identical else 1
+    return 1 if result.has_regression else 0
+
+
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     configure(verbosity=(-1 if args.quiet else args.verbose))
     if args.cmd == "list":
         return _cmd_list(args)
+    if args.cmd == "diff":
+        return _cmd_diff(args)
     return _cmd_record(args)
 
 

@@ -153,7 +153,12 @@ class FlightRecorder(Probe):
 
     def on_site_rollup(self, site, name, trace, device, row_devices,
                        pue=1.0, ci=None, total_devices=None,
-                       device_signal=None, t_end_s=None):
+                       device_signal=None, t_end_s=None, energy_wh=None,
+                       idle_energy_wh=None, carbon_active_g=None,
+                       carbon_idle_g=None, cosim=None, load=None):
+        # the driver-reported Eq. 2-5 totals (energy_wh .. load) are
+        # audit inputs (repro.obs.audit); the recorder derives its own
+        # timelines from the trace and ignores them
         from repro.core.power import PowerModel
 
         pm = PowerModel(device)

@@ -80,6 +80,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--obs-resolution", type=float, default=60.0,
                    help="flight-recorder timeline bin width in sim "
                         "seconds (default 60; observer-only)")
+    p.add_argument("--audit", action="store_true",
+                   help="attach the physics-invariant auditor "
+                        "(repro.obs.audit) to every executed scenario: "
+                        "conservation, Eq. 2-5 closure, KV/clock/power "
+                        "invariants. Observer-only (results stay "
+                        "bitwise identical); violations write a report "
+                        "under results/obs/divergence/ and exit 1. "
+                        "Forces serial execution; rejected in device "
+                        "mode. Stackable with --trace-out")
     return p
 
 
@@ -110,10 +119,19 @@ def main(argv=None) -> int:
     if args.clear_cache and cache is not None:
         print(f"cleared {cache.clear()} cached scenario(s)")
 
-    probe = None
+    probe = recorder = auditor = None
     if args.trace_out is not None:
         from repro.obs.recorder import FlightRecorder
-        probe = FlightRecorder(resolution_s=args.obs_resolution)
+        recorder = FlightRecorder(resolution_s=args.obs_resolution)
+        probe = recorder
+    if args.audit:
+        from repro.obs.audit import AuditProbe
+        auditor = AuditProbe()
+        if recorder is not None:
+            from repro.obs.probe import MultiProbe
+            probe = MultiProbe([recorder, auditor])
+        else:
+            probe = auditor
     if args.profile or probe is not None:
         PROFILER.enable(reset=True)
 
@@ -137,6 +155,8 @@ def main(argv=None) -> int:
             print(format_table(records))
         print(f"   {stats.summary()}")
         print(f"   derived: {derived}")
+        if auditor is not None:
+            print(f"   audit: {auditor.report().summary()}")
         print(f"   wrote {paths['csv']} {paths['json']} "
               f"({time.perf_counter() - t0:.2f}s)")
 
@@ -144,13 +164,22 @@ def main(argv=None) -> int:
         PROFILER.disable()
     if args.trace_out is not None:
         from repro.obs.chrometrace import write_chrome_trace
-        info = write_chrome_trace(args.trace_out, probe, PROFILER)
+        info = write_chrome_trace(args.trace_out, recorder, PROFILER)
         print(f"   wrote trace {info['path']} "
               f"({info['n_events']} events)")
     if args.profile:
         print("-- wall-clock phases --", file=sys.stderr)
         print(PROFILER.format_aggregate(), file=sys.stderr)
 
+    if auditor is not None and not auditor.report().ok:
+        from repro.obs.diff import DIVERGENCE_DIR
+        report = auditor.report()
+        DIVERGENCE_DIR.mkdir(parents=True, exist_ok=True)
+        path = DIVERGENCE_DIR / "audit.md"
+        path.write_text(report.to_markdown())
+        print(f"audit FAILED: {report.summary()}\n"
+              f"audit report: {path}", file=sys.stderr)
+        return 1
     if failed:
         print(f"failed sweeps: {', '.join(failed)}", file=sys.stderr)
         return 1

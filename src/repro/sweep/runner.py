@@ -115,6 +115,8 @@ def _execute_fleet_scenario(scenario: Scenario, probe=None) -> dict:
             "fleet scenarios run their own per-site microgrid co-sim; "
             f"post-processor {scenario.post!r} is not supported")
     t0 = time.perf_counter()
+    if probe is not None:
+        probe.on_run_begin(scenario.tag)
     if scenario.cfg.day is not None:
         with PROFILER.span("sim.fleet_day"):
             res = run_fleet_day(scenario.cfg, probe=probe)
@@ -232,6 +234,8 @@ def execute_scenario(scenario: Scenario, probe=None) -> dict:
         return _execute_fleet_scenario(scenario, probe=probe)
 
     t0 = time.perf_counter()
+    if probe is not None:
+        probe.on_run_begin(scenario.tag)
     with PROFILER.span("sim.event_loop"):
         res = run_simulation(scenario.cfg, probe=probe)
     rep = energy_report(res, pue=scenario.pue)
@@ -241,7 +245,8 @@ def execute_scenario(scenario: Scenario, probe=None) -> dict:
             device=scenario.cfg.device,
             row_devices=scenario.cfg.n_devices, pue=scenario.pue,
             ci=scenario.grid_ci,
-            total_devices=scenario.cfg.n_devices)
+            total_devices=scenario.cfg.n_devices,
+            energy_wh=rep.energy_wh)
     return single_site_record(scenario, single_site_metrics(res, scenario, rep),
                               t0)
 
@@ -267,6 +272,7 @@ class SweepStats:
     cache_memo: int = 0       # hits served from the in-process memo
     cache_disk: int = 0       # hits parsed off disk
     cache_miss: int = 0       # keys with no cached record
+    peak_rss_mb: float = 0.0  # process high-water RSS (0 off-POSIX)
 
     def summary(self) -> str:
         groups = (f", {self.trace_groups} trace group(s)"
@@ -278,10 +284,22 @@ class SweepStats:
         eff = (f", cache {self.cache_memo} memo / {self.cache_disk} disk"
                f" / {self.cache_miss} miss"
                if self.cache_attached else "")
+        rss = (f", peak RSS {self.peak_rss_mb:.0f} MB"
+               if self.peak_rss_mb else "")
         return (f"{self.total} scenarios: {self.executed} executed, "
                 f"{self.cache_hits} cache hits, "
                 f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)"
-                f"{groups}{shared}{eff}")
+                f"{groups}{shared}{eff}{rss}")
+
+
+def _peak_rss_mb() -> float:
+    """Process high-water RSS in MB (``ru_maxrss`` is KB on Linux);
+    0.0 where the ``resource`` module is unavailable."""
+    try:
+        import resource
+    except ImportError:
+        return 0.0
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 class SweepRunner:
@@ -302,10 +320,12 @@ class SweepRunner:
     memoization entirely.
 
     ``probe`` attaches a ``repro.obs.Probe`` to every *executed*
-    scenario (cache hits never re-simulate, so they record nothing).
-    A probe forces serial in-process execution — the recorder is
-    process-local state — and is rejected in device mode, whose
-    batched program has no event-per-stage structure to observe.
+    scenario (cache hits never re-simulate, so they record nothing) —
+    stack several with ``repro.obs.MultiProbe`` (e.g. a
+    ``FlightRecorder`` plus an ``AuditProbe``). A probe forces serial
+    in-process execution — probes are process-local state — and is
+    rejected in device mode, whose batched program has no
+    event-per-stage structure to observe.
     """
 
     def __init__(self, cache: Optional[ResultCache] = None,
@@ -389,6 +409,7 @@ class SweepRunner:
                         records[j] = self._rebind(record, scenarios[j])
 
         stats.elapsed_s = time.perf_counter() - t0
+        stats.peak_rss_mb = _peak_rss_mb()
         return [r for r in records if r is not None], stats
 
     # ---- execution backends over the cache-missed scenarios ----

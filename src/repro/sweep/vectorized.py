@@ -76,14 +76,10 @@ def execute_scenario_group(scenarios: List[Scenario],
 
     t0 = time.perf_counter()
     cfg = scenarios[0].cfg
+    if probe is not None:
+        probe.on_run_begin(scenarios[0].tag)
     with PROFILER.span("sim.event_loop"):
         res = run_simulation(cfg, probe=probe)
-    if probe is not None:
-        probe.on_site_rollup(
-            site=0, name=scenarios[0].tag, trace=res.stages,
-            device=cfg.device, row_devices=cfg.n_devices,
-            pue=scenarios[0].pue, ci=scenarios[0].grid_ci,
-            total_devices=cfg.n_devices)
     pm = PowerModel(cfg.device)
     shared = shared_result_metrics(res)
     sim_elapsed = time.perf_counter() - t0
@@ -97,6 +93,15 @@ def execute_scenario_group(scenarios: List[Scenario],
                                   [r.gpu_hours for r in reps],
                                   DEVICES[cfg.device],
                                   [sc.grid_ci for sc in scenarios])
+    if probe is not None:
+        # rollup fires after the stacked passes so the driver can hand
+        # the probe the group's Eq. 2-3 total (observer-only ordering:
+        # records are identical either way)
+        probe.on_site_rollup(
+            site=0, name=scenarios[0].tag, trace=res.stages,
+            device=cfg.device, row_devices=cfg.n_devices,
+            pue=scenarios[0].pue, ci=scenarios[0].grid_ci,
+            total_devices=cfg.n_devices, energy_wh=reps[0].energy_wh)
 
     records = []
     with PROFILER.span("record_assembly"):

@@ -1,0 +1,449 @@
+"""Physics-invariant auditor pins (``repro.obs.audit``).
+
+Three contract families:
+
+(a) **audit neutrality** — attaching an ``AuditProbe`` (alone or
+    stacked with a ``FlightRecorder`` through ``MultiProbe``) leaves
+    sweep records and day summaries bitwise identical to probe-off
+    runs, and every tier-1 grid audits *clean* with the expected
+    contracts actually exercised (``checks`` distinguishes "clean"
+    from "never checked");
+(b) **injected violations** — the auditor is a pure observer, so each
+    invariant is broken by feeding it a synthetic hook stream; every
+    breach must be caught with correct first-violation localization
+    (contract, run tag, site, stage, sim-time);
+(c) **reporting mechanics** — ``strict=True`` raises ``AuditError``,
+    ``max_per_contract`` caps storage and counts the overflow, and the
+    markdown rendering carries the violation table.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LLAMA3_8B
+from repro.core.power import PowerModel
+from repro.fleet.config import FleetConfig, SiteConfig
+from repro.fleet.day import run_fleet_day
+from repro.obs.audit import (CONTRACTS, EQ45_CLOSURE_RTOL, AuditError,
+                             AuditProbe)
+from repro.obs.probe import MultiProbe
+from repro.obs.recorder import FlightRecorder
+from repro.sim.hybrid import DayConfig
+from repro.sim.requests import WorkloadConfig
+from repro.sim.scheduler import SchedulerConfig
+from repro.sweep import SWEEPS, SweepRunner
+
+
+def _assert_records_bit_identical(off, on):
+    assert len(off) == len(on)
+    for a, b in zip(off, on):
+        assert a["scenario"] == b["scenario"]
+        assert a["params"] == b["params"]
+        assert a["key"] == b["key"]
+        assert a["metrics"] == b["metrics"], a["scenario"]
+
+
+# ---------------------------------------------------------------------------
+# (a) neutrality + clean tier-1 grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sweep,n_req", [("fig1", 16), ("fleet", 10),
+                                         ("shift", 10)])
+def test_audit_attached_records_bit_identical_and_clean(sweep, n_req):
+    scenarios = SWEEPS[sweep].build(True, n_requests=n_req)
+    auditor = AuditProbe()
+    off, _ = SweepRunner(cache=None, mode="event_loop").run(scenarios)
+    on, _ = SweepRunner(cache=None, mode="event_loop",
+                        probe=auditor).run(scenarios)
+    _assert_records_bit_identical(off, on)
+    report = auditor.report()
+    assert report.ok, report.summary()
+    assert report.runs == len(scenarios)
+    # clean because checked, not because skipped
+    core = {"clock-monotonic", "kv-budget", "batch-cap",
+            "request-conservation", "request-lifecycle",
+            "token-conservation", "admission-legality",
+            "mfu-range", "power-range", "eq23-closure"}
+    assert core <= set(report.checks), report.checks
+    assert set(report.checks) <= set(CONTRACTS)
+    if sweep == "shift":
+        # shift horizons span multiple load bins, arming Eq. 4-5
+        assert report.checks.get("eq45-closure", 0) > 0
+
+
+def day_cfg(n=1200, span=900.0):
+    wl = WorkloadConfig(
+        n_requests=n, qps=n / span, min_len=192, max_len=192, seed=0,
+        envelope="sinusoidal", envelope_amplitude=0.3,
+        envelope_period_h=span / 3600.0, burst_gain=2.5,
+        burst_mean_s=span / 15.0, burst_idle_mean_s=span / 2.5)
+    return FleetConfig(
+        model=LLAMA3_8B,
+        sites=(SiteConfig(name="s0", ci_trace="caiso-night",
+                          scheduler=SchedulerConfig(batch_cap=64)),),
+        workload=wl, router="round_robin",
+        day=DayConfig(mode="hybrid", epoch_s=300.0, pilot_requests=128,
+                      warmup_requests=32, util_threshold=0.6))
+
+
+def test_audit_attached_day_summary_bit_identical_and_clean():
+    cfg = day_cfg()
+    auditor = AuditProbe()
+    off = run_fleet_day(cfg).summary()
+    on = run_fleet_day(cfg, probe=auditor).summary()
+    assert off == on
+    report = auditor.report()
+    assert report.ok, report.summary()
+    # epoch boundaries rewound replica clocks without tripping the
+    # monotonic floor, and the day driver's rollup armed the closures
+    assert report.checks.get("clock-monotonic", 0) > 0
+    assert report.checks.get("eq45-closure", 0) > 0
+
+
+def test_multiprobe_stacks_recorder_and_auditor():
+    scenarios = SWEEPS["fig1"].build(True, n_requests=12)
+    rec = FlightRecorder(resolution_s=30.0)
+    auditor = AuditProbe()
+    off, _ = SweepRunner(cache=None, mode="event_loop").run(scenarios)
+    on, _ = SweepRunner(cache=None, mode="event_loop",
+                        probe=MultiProbe([rec, auditor])).run(scenarios)
+    _assert_records_bit_identical(off, on)
+    assert rec.n_stage_events > 0          # recorder saw the run
+    assert auditor.report().ok             # auditor audited it
+    assert auditor.report().n_checks > 0
+
+
+def test_sweep_cli_audit_flag_clean_run(tmp_path, capsys):
+    from repro.sweep.cli import main
+    rc = main(["fig1", "--smoke", "--n-requests", "8", "--no-cache",
+               "--audit", "--quiet", "--out", str(tmp_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "audit: clean" in out
+
+
+# ---------------------------------------------------------------------------
+# (b) injected violations: synthetic hook streams, exact localization
+# ---------------------------------------------------------------------------
+
+def _sched(kv=0, budget=4096, cap=64, running=0):
+    in_flight = tuple(range(running))
+
+    class _Cfg:
+        kv_budget_tokens = budget
+        batch_cap = cap
+
+    class _S:
+        cfg = _Cfg()
+        kv_tokens = kv
+        waiting = ()
+        running = in_flight
+    return _S()
+
+
+class _Req:
+    def __init__(self, rid, arrival=0.0, ready=0.0, first=0.1, done=0.2,
+                 prefill=8, decode=8, prefill_done=None, decoded=None):
+        self.rid = rid
+        self.arrival_s = arrival
+        self.ready_s = ready
+        self.release_s = ready
+        self.t_first_token = first
+        self.t_done = done
+        self.prefill_tokens = prefill
+        self.decode_tokens = decode
+        self.prefill_done = prefill if prefill_done is None else prefill_done
+        self.decoded = decode if decoded is None else decoded
+
+
+class _Trace:
+    def __init__(self, mfu, dur_s, start_s=None, batch_size=None,
+                 n_prefill_tokens=None, n_decode_tokens=None,
+                 replica=None):
+        self.mfu = np.asarray(mfu, np.float64)
+        self.dur_s = np.asarray(dur_s, np.float64)
+        # optional structural columns: the rollup's vectorized checks
+        # skip whatever a trace doesn't carry
+        self.start_s = (None if start_s is None
+                        else np.asarray(start_s, np.float64))
+        self.batch_size = (None if batch_size is None
+                           else np.asarray(batch_size, np.float64))
+        self.n_prefill_tokens = (
+            None if n_prefill_tokens is None
+            else np.asarray(n_prefill_tokens, np.float64))
+        self.n_decode_tokens = (
+            None if n_decode_tokens is None
+            else np.asarray(n_decode_tokens, np.float64))
+        self.replica = (None if replica is None
+                        else np.asarray(replica, np.float64))
+
+    def __len__(self):
+        return len(self.mfu)
+
+
+class _Load:
+    def __init__(self, times, values):
+        self.times = np.asarray(times, np.float64)
+        self.values = np.asarray(values, np.float64)
+
+
+def _stage(probe, t_s, site=0, replica=0, sched=None, prefill=32,
+           decode=4, batch=4):
+    probe.on_stage(t_s, 0.05, site, replica, sched or _sched(),
+                   prefill, decode, batch)
+
+
+def test_shuffled_stage_order_trips_clock_monotonic():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 1.0)
+    _stage(p, 0.5)          # same (site, replica): clock went backwards
+    v = p.report().first
+    assert v is not None and v.contract == "clock-monotonic"
+    # streamed floor violations localize by sim-time (stage index is
+    # a trace-rollup concept; -1 marks not-stage-scoped)
+    assert (v.run, v.site, v.stage, v.t_s) == ("synthetic", 0, -1, 0.5)
+    assert "replica 0" in v.detail
+
+
+def test_decoupled_replica_clocks_are_legal():
+    # replica 1 lagging replica 0 is NOT a violation (per-replica floors)
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 1.0, replica=0)
+    _stage(p, 0.5, replica=1)
+    assert p.report().ok
+
+
+def test_epoch_eval_resets_monotonic_floor():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 100.0, site=0)
+    p.on_epoch_eval(0, None)
+    _stage(p, 10.0, site=0)   # epoch rewound the clock: legal
+    assert p.report().ok
+
+
+def test_kv_budget_breach_localized():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 0.0)                                       # clean
+    _stage(p, 1.0, sched=_sched(kv=5000, budget=4096))   # breach
+    v = p.report().first
+    assert v.contract == "kv-budget" and v.stage == -1 and v.t_s == 1.0
+    assert "4096" in v.expected and v.actual == "5000"
+
+
+def test_kv_budget_allows_decode_growth():
+    # the budget gates admission (prompt tokens); decode then grows
+    # occupancy one token per running request — legal past the budget
+    sched = _sched(kv=4100, budget=4096)
+    sched.running = (_Req(0, decoded=3), _Req(1, decoded=2))
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 0.0, sched=sched)            # 4100 <= 4096 + 5
+    assert p.report().ok
+    sched.running = (_Req(0, decoded=3),)  # 4100 > 4096 + 3
+    _stage(p, 1.0, sched=sched)
+    assert p.report().first.contract == "kv-budget"
+    assert "decode-grown" in p.report().first.expected
+
+
+def test_batch_cap_breach():
+    # batch sizes are audited vectorized from the committed trace at
+    # rollup; on_stage only registers the site's cap
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 0.0, sched=_sched(cap=8), batch=4)
+    p.on_site_rollup(0, "synthetic",
+                     _Trace([0.3, 0.4], [0.05, 0.05],
+                            start_s=[0.0, 0.1], batch_size=[4, 9]),
+                     "a100", 1)
+    v = p.report().first
+    assert v.contract == "batch-cap" and v.stage == 1
+    assert "batch=9" in v.actual and "<= 8" in v.expected
+
+
+def test_dropped_request_caught_at_finalize():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    for rid in range(4):                       # 4 routed ...
+        p.on_route(0.1 * rid, rid, site=0)
+    p.on_requests(np.zeros(5), np.zeros(5))    # ... of 5 generated
+    v = p.report().first
+    assert v.contract == "request-conservation"
+    assert (v.site, v.stage, v.t_s) == (-1, -1, -1.0)
+    assert v.expected == "5 requests routed" and v.actual == "4 routed"
+
+
+def test_duplicate_route_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_route(0.0, 7, site=0)
+    p.on_route(0.1, 7, site=1)
+    v = p.report().first
+    assert v.contract == "request-conservation" and v.site == 1
+    assert "rid 7" in v.expected and v.actual == "routed again"
+
+
+def test_route_order_regression_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_route(1.0, 0, site=0)
+    p.on_route(0.5, 1, site=0)
+    v = p.report().first
+    assert v.contract == "clock-monotonic"
+    assert "ready order" in v.detail
+
+
+def test_completions_exceeding_admissions_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_route(0.0, 0, site=0)
+    _stage(p, 0.1)
+    p.on_complete(0.2, 0, 0, [_Req(0), _Req(1)])   # 2 done, 1 admitted
+    v = p.report().first
+    assert v.contract == "request-conservation"
+    assert v.expected == "completed <= 1 admitted"
+    assert v.actual == "2 completed"
+
+
+def test_request_lifecycle_partial_decode_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 0.0)
+    p.on_complete(0.2, 0, 0, [_Req(0, decode=8, decoded=5)])
+    v = p.report().first
+    assert v.contract == "request-lifecycle" and v.t_s == 0.2
+    assert "decoded 5/8" in v.actual
+
+
+def test_token_conservation_caught():
+    # completion events stream in; the comparison against the trace's
+    # staged-token cumsum runs vectorized at rollup
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 0.0, prefill=8, decode=2)
+    p.on_complete(0.1, 0, 0, [_Req(0, prefill=8, decode=8)])
+    p.on_site_rollup(0, "synthetic",
+                     _Trace([0.3], [0.05], start_s=[0.0],
+                            n_prefill_tokens=[8], n_decode_tokens=[2]),
+                     "a100", 1)             # staged: 8p / 2d
+    v = p.report().first
+    assert v.contract == "token-conservation" and v.t_s == 0.1
+    assert "8p/2d" in v.expected and "8p/8d" in v.actual
+
+
+def test_autoscale_illegal_transitions_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_scale(0.0, 0, 2, 1, "up_warm")
+    p.on_scale(1.0, 0, 4, 0, "up_cold")     # active stepped by two
+    v = p.report().first
+    assert v.contract == "autoscale-legality"
+    assert v.actual == "up_cold: n_active 2 -> 4"
+
+    p2 = AuditProbe()
+    p2.on_run_begin("synthetic")
+    p2.on_scale(0.0, 0, 1, 0, "teleport")   # unknown kind
+    assert p2.report().first.actual == "kind='teleport'"
+
+
+def test_admission_before_arrival_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_requests(np.array([1.0, 2.0]), np.array([1.0, 1.5]))
+    v = p.report().first
+    assert v.contract == "admission-legality"
+    assert "request index 1" in v.detail
+
+
+def test_mfu_out_of_range_caught():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_site_rollup(0, "s0", _Trace([0.3, 1.5, 0.2], [1.0, 1.0, 1.0]),
+                     "a100", 8)
+    v = p.report().first
+    assert v.contract == "mfu-range" and v.stage == 1
+    assert "1.5" in v.actual
+
+
+def test_eq23_closure_clean_then_scaled_energy_caught():
+    mfu = [0.2, 0.5, 0.4]
+    dur = [1.0, 2.0, 0.5]
+    p_w = np.asarray(PowerModel("a100").power(np.asarray(mfu)),
+                     np.float64)
+    wh = float(np.sum(p_w * np.asarray(dur) * 8 * 1.2 / 3600.0))
+
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_site_rollup(0, "s0", _Trace(mfu, dur), "a100", 8, pue=1.2,
+                     energy_wh=wh)
+    assert p.report().ok        # exact per-stage sum closes Eq. 2-3
+
+    p.on_site_rollup(0, "s0", _Trace(mfu, dur), "a100", 8, pue=1.2,
+                     energy_wh=wh * 1.01)    # scaled power column
+    v = p.report().first
+    assert v.contract == "eq23-closure" and v.site == 0
+    assert "Wh" in v.expected
+
+
+def test_eq45_closure_clean_then_perturbed_cosim_caught():
+    times = np.arange(0.0, 600.0, 60.0)
+    vals = np.full(len(times), 1000.0)      # flat 1 kW load
+    e_kwh = float(vals.sum()) * 60.0 / 3600.0 / 1000.0
+    kg = float(np.sum(vals * 400.0)) * 60.0 / 3600.0 / 1e6
+    cosim = {"total_energy_kwh": e_kwh,
+             "total_emissions_nosolar_kg": kg}
+
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    p.on_site_rollup(0, "s0", _Trace([], []), "a100", 8, ci=400.0,
+                     cosim=dict(cosim), load=_Load(times, vals))
+    assert p.report().ok
+    assert p.report().checks.get("eq45-closure", 0) == 2
+
+    bad = dict(cosim)
+    bad["total_energy_kwh"] = e_kwh * (1.0 + 10 * EQ45_CLOSURE_RTOL)
+    p.on_site_rollup(0, "s0", _Trace([], []), "a100", 8, ci=400.0,
+                     cosim=bad, load=_Load(times, vals))
+    v = p.report().first
+    assert v.contract == "eq45-closure" and "kWh" in v.expected
+
+
+# ---------------------------------------------------------------------------
+# (c) reporting mechanics
+# ---------------------------------------------------------------------------
+
+def test_strict_mode_raises_at_first_breach():
+    p = AuditProbe(strict=True)
+    p.on_run_begin("synthetic")
+    _stage(p, 1.0)
+    with pytest.raises(AuditError) as ei:
+        _stage(p, 0.5)
+    assert ei.value.violation.contract == "clock-monotonic"
+
+
+def test_max_per_contract_caps_storage_and_counts_dropped():
+    p = AuditProbe(max_per_contract=2)
+    p.on_run_begin("synthetic")
+    for k in range(5):
+        _stage(p, 0.1 * k, sched=_sched(kv=9999, budget=4096))
+    report = p.report()
+    assert len(report.violations) == 2 and report.dropped == 3
+    assert "+3 beyond cap" in report.summary()
+    assert report.by_contract() == {"kv-budget": 2}
+
+
+def test_report_serialization_and_markdown():
+    p = AuditProbe()
+    p.on_run_begin("synthetic")
+    _stage(p, 1.0)
+    _stage(p, 0.5)
+    report = p.report()
+    d = report.to_dict()
+    assert d["ok"] is False and d["runs"] == 1
+    assert d["by_contract"] == {"clock-monotonic": 1}
+    assert d["violations"][0]["contract"] == "clock-monotonic"
+    md = report.to_markdown()
+    assert "# Audit report" in md and "clock-monotonic" in md
+    assert "## Violations" in md

@@ -298,13 +298,16 @@ GOLDEN_FIG1_QPS645 = {
 
 
 def test_schema6_fig1_golden_record_bitwise():
+    # drift fails *through* the diff explainer: the raised error names
+    # the first divergent cell (dependency order) and the report path,
+    # and CI uploads results/obs/divergence/ as an artifact
+    from repro.obs import assert_golden
     from repro.sweep import SCHEMA_VERSION
     assert SCHEMA_VERSION == 6
     scenario = SWEEPS["fig1"].build(True)[1]
     assert scenario.params["qps"] == 6.45
     metrics = execute_scenario(scenario)["metrics"]
-    for key, want in GOLDEN_FIG1_QPS645.items():
-        assert metrics[key] == want, (key, metrics[key], want)
+    assert_golden(metrics, GOLDEN_FIG1_QPS645, "golden_fig1_qps645")
 
 
 #: first fleet smoke scenario (a100+a100, hydro+coal, round_robin) —
@@ -371,16 +374,16 @@ GOLDEN_SHIFT_0 = {
 
 
 def test_schema6_fleet_golden_record_bitwise():
+    from repro.obs import assert_golden
     scenario = SWEEPS["fleet"].build(True)[0]
     assert scenario.params["devices"] == "a100+a100"
     metrics = execute_scenario(scenario)["metrics"]
-    for key, want in GOLDEN_FLEET_0.items():
-        assert metrics[key] == want, (key, metrics[key], want)
+    assert_golden(metrics, GOLDEN_FLEET_0, "golden_fleet_0")
 
 
 def test_schema6_shift_golden_record_bitwise():
+    from repro.obs import assert_golden
     scenario = SWEEPS["shift"].build(True)[0]
     assert scenario.params["policy"] == "immediate"
     metrics = execute_scenario(scenario)["metrics"]
-    for key, want in GOLDEN_SHIFT_0.items():
-        assert metrics[key] == want, (key, metrics[key], want)
+    assert_golden(metrics, GOLDEN_SHIFT_0, "golden_shift_0")

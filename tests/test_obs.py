@@ -284,9 +284,56 @@ def test_logger_namespacing_and_verbosity():
             root.removeHandler(h)
 
 
+def test_logger_color_follows_no_color_and_tty(monkeypatch):
+    import io
+
+    from repro.obs.log import _ColorFormatter, _use_color
+
+    plain = io.StringIO()                       # not a tty
+    monkeypatch.delenv("NO_COLOR", raising=False)
+    assert not _use_color(plain)
+
+    class _Tty(io.StringIO):
+        def isatty(self):
+            return True
+
+    assert _use_color(_Tty())
+    monkeypatch.setenv("NO_COLOR", "1")         # NO_COLOR beats tty
+    assert not _use_color(_Tty())
+    monkeypatch.delenv("NO_COLOR", raising=False)
+
+    # redirected streams get a plain formatter end to end
+    root = configure(verbosity=0, stream=plain)
+    try:
+        get_logger("sweep").warning("beware")
+        assert "beware" in plain.getvalue()
+        assert "\x1b[" not in plain.getvalue()
+    finally:
+        for h in list(root.handlers):
+            root.removeHandler(h)
+
+    # the color formatter wraps WARNING+ and leaves INFO bare
+    fmt = _ColorFormatter("%(message)s")
+    rec = logging.LogRecord("repro", logging.WARNING, __file__, 0,
+                            "boom", None, None)
+    assert fmt.format(rec) == "\x1b[33mboom\x1b[0m"
+    rec.levelno = logging.INFO
+    assert fmt.format(rec) == "boom"
+
+
+def test_sweep_summary_reports_peak_rss():
+    scenarios = SWEEPS["fig1"].build(True, n_requests=8)
+    _, stats = SweepRunner(cache=None, mode="event_loop").run(scenarios)
+    assert stats.peak_rss_mb > 0.0              # Linux: ru_maxrss in KB
+    assert "peak RSS" in stats.summary()
+    assert f"{stats.peak_rss_mb:.0f} MB" in stats.summary()
+
+
 def test_probe_base_hooks_are_noops():
     p = Probe()
+    p.on_run_begin("tag")
     p.on_stage(0.0, 0.1, 0, 0, None, 0, 0, 0)
+    p.on_complete(0.0, 0, 0, [])
     p.on_route(0.0, 0, 0)
     p.on_scale(0.0, 0, 1, 0, "up")
     p.on_requests([], [])
