@@ -119,6 +119,21 @@ class SpanProfiler:
             a["count"] += int(m["count"])
             a["total_s"] += float(m["total_s"])
 
+    def write_aggregate(self, path) -> None:
+        """Persist ``aggregate()`` as JSON — the cross-process handoff
+        format (remote sweep workers dump it per shard; the coordinator
+        folds the files back in via ``merge_file``)."""
+        import json
+        from pathlib import Path
+        Path(path).write_text(json.dumps(self.aggregate(), indent=1))
+
+    def merge_file(self, path) -> None:
+        """``merge()`` a JSON aggregate previously written by
+        ``write_aggregate`` (possibly on another host)."""
+        import json
+        with open(path) as f:
+            self.merge(json.load(f))
+
     def format_aggregate(self) -> str:
         """Human-readable per-phase table, longest total first."""
         agg = self.aggregate()

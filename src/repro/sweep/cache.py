@@ -7,17 +7,20 @@ Layout: ``<root>/<key[:2]>/<key>.json`` — one JSON record per scenario.
 Writes are atomic (tmp file + rename) so parallel workers and
 interrupted runs never leave a torn entry behind.
 
-Reads and writes are additionally memoized in-process (bounded dict):
+Reads and writes are additionally memoized in-process (bounded LRU):
 repeated sweeps over overlapping grids in one process — the benchmark
-harness, notebook loops — skip the open+parse per hit. The on-disk
-entry stays authoritative; the memo only ever holds records this
-process itself read or wrote.
+harness, notebook loops, long-lived remote workers — skip the
+open+parse per hit, and eviction drops the least-recently-touched
+entry so hot keys stay resident past the cap. The on-disk entry stays
+authoritative; the memo only ever holds records this process itself
+read or wrote.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+from collections import OrderedDict
 from pathlib import Path
 from typing import Iterator, Optional
 
@@ -34,7 +37,7 @@ class ResultCache:
 
     def __init__(self, root: Optional[Path] = None):
         self.root = Path(root) if root is not None else default_cache_root()
-        self._memo: dict = {}
+        self._memo: OrderedDict = OrderedDict()
         # cumulative effectiveness counters (process lifetime): hits
         # served from the in-process memo vs parsed off disk vs misses.
         # The sweep runner snapshots deltas per run for its summary.
@@ -46,6 +49,7 @@ class ResultCache:
     def get(self, key: str) -> Optional[dict]:
         memo = self._memo.get(key)
         if memo is not None:
+            self._memo.move_to_end(key)
             self.counters["memo"] += 1
             return memo
         path = self.path_for(key)
@@ -63,8 +67,10 @@ class ResultCache:
         return record
 
     def _remember(self, key: str, record: dict) -> None:
-        if len(self._memo) >= self._MEMO_CAP:
-            self._memo.clear()
+        if key in self._memo:
+            self._memo.move_to_end(key)
+        elif len(self._memo) >= self._MEMO_CAP:
+            self._memo.popitem(last=False)   # evict least-recently-used
         self._memo[key] = record
 
     def put(self, key: str, record: dict) -> Path:

@@ -54,6 +54,27 @@ def build_parser() -> argparse.ArgumentParser:
                         "where divergence analysis proves it safe "
                         "(equivalent within a documented ulp-level "
                         "tolerance, see repro.sweep.device)")
+    p.add_argument("--backend", choices=("local", "remote"),
+                   default="local",
+                   help="local: execute in this process (pool); "
+                        "remote: publish trace-group shards to a "
+                        "shared-filesystem work queue for detached "
+                        "repro.sweep.worker processes (requires the "
+                        "cache; see repro.sweep.remote)")
+    p.add_argument("--remote-workers", type=int, default=2,
+                   help="convenience worker processes the coordinator "
+                        "spawns on this host (default 2; 0 = rely on "
+                        "externally launched workers)")
+    p.add_argument("--queue-dir", type=Path, default=None,
+                   help="work-queue directory shared with workers "
+                        "(default <cache>/.queue)")
+    p.add_argument("--lease-s", type=float, default=30.0,
+                   help="shard lease: a claim whose heartbeat is "
+                        "staler than this is reclaimed and retried "
+                        "(default 30)")
+    p.add_argument("--remote-verify", type=int, default=0, metavar="N",
+                   help="re-run N trace groups serially in-process and "
+                        "assert the remote records are bit-identical")
     p.add_argument("--no-cache", action="store_true",
                    help="disable the on-disk result cache")
     p.add_argument("--cache-dir", type=Path, default=None,
@@ -119,6 +140,20 @@ def main(argv=None) -> int:
     if args.clear_cache and cache is not None:
         print(f"cleared {cache.clear()} cached scenario(s)")
 
+    remote_opts = None
+    if args.backend == "remote":
+        if cache is None:
+            print("--backend remote requires the result cache "
+                  "(workers return records through it); drop --no-cache",
+                  file=sys.stderr)
+            return 2
+        from repro.sweep.remote import RemoteOptions
+        remote_opts = RemoteOptions(
+            queue_dir=args.queue_dir,
+            spawn_workers=max(0, args.remote_workers),
+            lease_s=args.lease_s,
+            verify_groups=max(0, args.remote_verify))
+
     probe = recorder = auditor = None
     if args.trace_out is not None:
         from repro.obs.recorder import FlightRecorder
@@ -144,7 +179,8 @@ def main(argv=None) -> int:
             records, stats, derived = run_sweep(
                 name, smoke=args.smoke, n_requests=args.n_requests,
                 workers=args.workers, cache=cache, mode=args.mode,
-                probe=probe, progress=lambda msg: _log.info("%s", msg))
+                probe=probe, backend=args.backend, remote=remote_opts,
+                progress=lambda msg: _log.info("%s", msg))
         except Exception as exc:           # keep sweeping, report at exit
             failed.append(name)
             print(f"   FAILED: {type(exc).__name__}: {exc}",

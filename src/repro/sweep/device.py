@@ -64,6 +64,7 @@ class DeviceStats:
     trace_groups: int = 0
     event_loops: int = 0     # groups driven through the event loop
     replayed: int = 0        # groups served by divergence replay
+    devices: int = 1         # accelerators the dispatch sharded over
 
 
 def _next_pow2(n: int) -> int:
@@ -107,19 +108,72 @@ def _group_kernel(comp_pre, comp_dec, comp_score, comp_kv,
 
 
 _PROGRAM = None
+_PMAP_PROGRAMS: Dict[int, object] = {}
 
 # padded shapes this process has already dispatched: a new (G, S, K)
 # bucket pays XLA compilation inside the call, a seen one replays the
 # jit cache — the wall-clock profiler labels the two differently
 _SEEN_SHAPES: set = set()
 
+#: persistent-compilation-cache location; "off"/"0"/"none"/"" disables
+#: (tests that pin compile-vs-execute span names set it off so a warm
+#: on-disk cache can't blur the distinction)
+ENV_JAX_CACHE_DIR = "REPRO_JAX_CACHE_DIR"
+DEFAULT_JAX_CACHE_DIR = "results/jax_cache"
+
+_PERSIST_CONFIGURED = False
+
+
+def _maybe_persistent_cache() -> None:
+    """Point jax at an on-disk compilation cache so the device
+    program's XLA compile (``device_first_call_s``, ~0.3s/process) is
+    paid once per shape bucket per machine instead of once per
+    process — exactly the cost profile remote workers and process
+    pools hit. Config keys are set best-effort: absent on older jax
+    versions just means no persistence."""
+    global _PERSIST_CONFIGURED
+    if _PERSIST_CONFIGURED:
+        return
+    _PERSIST_CONFIGURED = True
+    import os
+    raw = os.environ.get(ENV_JAX_CACHE_DIR, DEFAULT_JAX_CACHE_DIR)
+    if raw.strip().lower() in ("", "off", "0", "none"):
+        return
+    import jax
+    try:
+        os.makedirs(raw, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", raw)
+        # the grid program compiles in ~0.3s — below the default 1s
+        # persistence threshold — so lower both floors to "always"
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          -1)
+    except (AttributeError, OSError):
+        pass
+
 
 def _program():
     global _PROGRAM
     if _PROGRAM is None:
         import jax
+        _maybe_persistent_cache()
         _PROGRAM = jax.jit(jax.vmap(_group_kernel))
     return _PROGRAM
+
+
+def _pmap_program(n_dev: int):
+    """pmap(vmap(kernel)): the same per-group kernel, with the padded
+    group axis split ``(G,) -> (D, G/D)`` so each local device
+    evaluates its own slab — numerically the identical program per
+    group, so the ``DEVICE_MODE_RTOL`` contract is unchanged."""
+    prog = _PMAP_PROGRAMS.get(n_dev)
+    if prog is None:
+        import jax
+        _maybe_persistent_cache()
+        prog = jax.pmap(jax.vmap(_group_kernel))
+        _PMAP_PROGRAMS[n_dev] = prog
+    return prog
 
 
 def _acquire_results(scenarios: Sequence[Scenario],
@@ -222,18 +276,34 @@ def execute_device_grid(scenarios: Sequence[Scenario]
     # ---- the single dispatch for the whole grid ----
     # enable_x64 is scoped: the program traces/executes in f64 without
     # flipping the process-global default (kernel/launcher tests in the
-    # same process rely on f32 defaults)
-    shape_sig = (gp, sp, kp)
+    # same process rely on f32 defaults). With >1 local accelerator the
+    # padded group axis shards (D, G/D) across devices via pmap —
+    # always exact: gp is a power of two, and so is D
+    n_local = jax.local_device_count()
+    d = 1
+    while d * 2 <= min(n_local, gp):
+        d *= 2
+    args = (comp[0], comp[1], comp[2], comp[3],
+            params, powerp, ndev, phi, pues, cis)
+    shape_sig = (gp, sp, kp, d)
     dispatch_span = ("device.jit_compile_and_execute"
                      if shape_sig not in _SEEN_SHAPES
                      else "device.execute")
     with jax.experimental.enable_x64():
         with PROFILER.span(dispatch_span):
-            out = _program()(comp[0], comp[1], comp[2], comp[3],
-                             params, powerp, ndev, phi, pues, cis)
-            e_sum, m_sum, dur, peak, op_g, emb_g = tuple(
-                np.asarray(o) for o in out)
+            if d > 1:
+                sharded = tuple(
+                    a.reshape((d, gp // d) + a.shape[1:]) for a in args)
+                out = _pmap_program(d)(*sharded)
+                e_sum, m_sum, dur, peak, op_g, emb_g = tuple(
+                    np.asarray(o).reshape((gp,) + np.asarray(o).shape[2:])
+                    for o in out)
+            else:
+                out = _program()(*args)
+                e_sum, m_sum, dur, peak, op_g, emb_g = tuple(
+                    np.asarray(o) for o in out)
     _SEEN_SHAPES.add(shape_sig)
+    stats.devices = d
 
     # ---- record assembly through the shared single-site path ----
     for gi, (g, res) in enumerate(zip(single, results)):

@@ -43,6 +43,9 @@ from repro.sweep.cache import ResultCache
 from repro.sweep.grid import SCHEMA_VERSION, Scenario
 
 EXECUTION_MODES = ("vectorized", "event_loop", "device")
+#: where cache-missed scenarios execute: in this process (pool) or on
+#: detached workers over a shared-filesystem work queue (sweep.remote)
+BACKENDS = ("local", "remote")
 
 
 # --------------------------------------------------------------------------
@@ -272,7 +275,14 @@ class SweepStats:
     cache_memo: int = 0       # hits served from the in-process memo
     cache_disk: int = 0       # hits parsed off disk
     cache_miss: int = 0       # keys with no cached record
-    peak_rss_mb: float = 0.0  # process high-water RSS (0 off-POSIX)
+    peak_rss_mb: float = 0.0  # process tree high-water RSS (0 off-POSIX)
+    # remote backend (sweep.remote): shard-queue observables
+    backend: str = "local"
+    shards: int = 0
+    remote_workers: int = 0   # distinct workers seen in manifests
+    lease_expired: int = 0
+    retried: int = 0
+    quarantined: int = 0
 
     def summary(self) -> str:
         groups = (f", {self.trace_groups} trace group(s)"
@@ -286,20 +296,30 @@ class SweepStats:
                if self.cache_attached else "")
         rss = (f", peak RSS {self.peak_rss_mb:.0f} MB"
                if self.peak_rss_mb else "")
+        rem = (f", remote: shards={self.shards} "
+               f"workers={self.remote_workers} "
+               f"expired={self.lease_expired} retried={self.retried} "
+               f"quarantined={self.quarantined}"
+               if self.backend == "remote" and self.executed else "")
         return (f"{self.total} scenarios: {self.executed} executed, "
                 f"{self.cache_hits} cache hits, "
                 f"{self.elapsed_s:.2f}s wall, {self.workers} worker(s)"
-                f"{groups}{shared}{eff}{rss}")
+                f"{groups}{shared}{eff}{rss}{rem}")
 
 
 def _peak_rss_mb() -> float:
-    """Process high-water RSS in MB (``ru_maxrss`` is KB on Linux);
-    0.0 where the ``resource`` module is unavailable."""
+    """Process-tree high-water RSS in MB (``ru_maxrss`` is KB on
+    Linux): the max of this process and its reaped children, so
+    multiprocessing sweeps report the pool workers' footprint rather
+    than just the coordinator's. 0.0 where ``resource`` is
+    unavailable."""
     try:
         import resource
     except ImportError:
         return 0.0
-    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    own = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    kids = resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss
+    return max(own, kids) / 1024.0
 
 
 class SweepRunner:
@@ -326,23 +346,49 @@ class SweepRunner:
     in-process execution — probes are process-local state — and is
     rejected in device mode, whose batched program has no
     event-per-stage structure to observe.
+
+    ``backend="remote"`` ships cache-missed trace groups to detached
+    ``repro.sweep.worker`` processes through a shared-filesystem work
+    queue (``repro.sweep.remote``): the workers write records straight
+    into the shared cache and the coordinator reads them back, so a
+    cache is mandatory and the records are bit-identical to local
+    vectorized execution. ``remote`` takes a ``RemoteOptions``; probes
+    are process-local and therefore rejected.
     """
 
     def __init__(self, cache: Optional[ResultCache] = None,
                  workers: int = 1, mode: str = "vectorized",
-                 probe=None):
+                 probe=None, backend: str = "local", remote=None):
         if mode not in EXECUTION_MODES:
             raise ValueError(f"unknown mode {mode!r}; have "
                              f"{EXECUTION_MODES}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; have "
+                             f"{BACKENDS}")
         if probe is not None and mode == "device":
             raise ValueError(
                 "probe recording is not supported in device mode (the "
                 "batched grid program exposes no per-stage events); "
                 "use mode='vectorized' or 'event_loop'")
+        if backend == "remote":
+            if cache is None:
+                raise ValueError(
+                    "backend='remote' requires a ResultCache — the "
+                    "shared cache is how workers return records")
+            if probe is not None:
+                raise ValueError(
+                    "probe recording is not supported on the remote "
+                    "backend (probes are process-local state)")
+            if mode == "event_loop":
+                raise ValueError(
+                    "the remote backend ships whole trace groups; use "
+                    "mode='vectorized' (exact) or 'device'")
         self.cache = cache
         self.workers = max(1, int(workers))
         self.mode = mode
         self.probe = probe
+        self.backend = backend
+        self.remote = remote
 
     @staticmethod
     def _rebind(record: dict, sc: Scenario) -> dict:
@@ -363,7 +409,7 @@ class SweepRunner:
         note = progress or (lambda msg: None)
         records: List[Optional[dict]] = [None] * len(scenarios)
         stats = SweepStats(total=len(scenarios), workers=self.workers,
-                           mode=self.mode,
+                           mode=self.mode, backend=self.backend,
                            cache_attached=self.cache is not None)
 
         c0 = dict(self.cache.counters) if self.cache is not None else {}
@@ -392,7 +438,9 @@ class SweepRunner:
 
         if misses:
             todo = [scenarios[i] for i in misses]
-            if self.mode == "vectorized":
+            if self.backend == "remote":
+                fresh = self._run_remote(todo, note, stats)
+            elif self.mode == "vectorized":
                 fresh, stats.trace_groups = self._run_vectorized(todo, note)
             elif self.mode == "device":
                 fresh = self._run_device(todo, note, stats)
@@ -403,7 +451,10 @@ class SweepRunner:
                     record["meta"]["cache_hit"] = False
                     records[i] = record
                     stats.executed += 1
-                    if self.cache is not None:
+                    # remote workers already persisted their records
+                    # into the shared cache — re-putting them here
+                    # would only re-serialize identical bytes
+                    if self.cache is not None and self.backend != "remote":
                         self.cache.put(record["key"], record)
                     for j in dup_of[scenarios[i].key]:
                         records[j] = self._rebind(record, scenarios[j])
@@ -440,22 +491,34 @@ class SweepRunner:
             groups = group_by_trace(todo)
         group_scs = [[todo[j] for j in g] for g in groups]
         if self.probe is None and self.workers > 1 and len(group_scs) > 1:
+            from repro.sweep.vectorized import estimate_group_cost
             ctx = multiprocessing.get_context("spawn")
             n = min(self.workers, len(group_scs))
             note(f"executing {len(todo)} scenarios as {len(groups)} "
                  f"trace group(s) on {n} processes")
+            # submit heaviest groups first (LPT order, chunksize 1):
+            # group_by_trace yields wildly unbalanced groups, and FIFO
+            # submission can strand the biggest trace on the last
+            # worker while the rest idle
+            order = sorted(range(len(group_scs)),
+                           key=lambda i: (-estimate_group_cost(
+                               group_scs[i]), i))
+            ordered = [group_scs[i] for i in order]
             with PROFILER.span("pool.vectorized"), \
                     ProcessPoolExecutor(max_workers=n,
                                         mp_context=ctx) as pool:
                 if PROFILER.enabled:
                     outs = list(pool.map(execute_scenario_group_profiled,
-                                         group_scs))
+                                         ordered, chunksize=1))
                     for _, agg in outs:
                         PROFILER.merge(agg)
-                    per_group = [recs for recs, _ in outs]
+                    ordered_recs = [recs for recs, _ in outs]
                 else:
-                    per_group = list(pool.map(execute_scenario_group,
-                                              group_scs))
+                    ordered_recs = list(pool.map(execute_scenario_group,
+                                                 ordered, chunksize=1))
+            per_group: List[Optional[List[dict]]] = [None] * len(group_scs)
+            for pos, recs in zip(order, ordered_recs):
+                per_group[pos] = recs
         else:
             note(f"executing {len(todo)} scenarios as {len(groups)} "
                  f"trace group(s) serially")
@@ -466,6 +529,21 @@ class SweepRunner:
             for j, rec in zip(idxs, recs):
                 fresh[j] = rec
         return fresh, len(groups)
+
+    def _run_remote(self, todo: List[Scenario], note,
+                    stats: SweepStats) -> List[dict]:
+        from repro.sweep.remote import RemoteCoordinator
+        coord = RemoteCoordinator(self.cache, opts=self.remote,
+                                  mode=self.mode, note=note)
+        with PROFILER.span("remote.execute"):
+            fresh, rstats = coord.execute(todo)
+        stats.trace_groups = rstats.trace_groups
+        stats.shards = rstats.shards
+        stats.remote_workers = rstats.workers
+        stats.lease_expired = rstats.lease_expired
+        stats.retried = rstats.retried
+        stats.quarantined = rstats.quarantined
+        return fresh
 
     def _run_device(self, todo: List[Scenario], note,
                     stats: SweepStats) -> List[dict]:
@@ -495,8 +573,10 @@ def _execute_scenario_profiled(sc: Scenario) -> Tuple[dict, dict]:
 def run_scenarios(scenarios: Sequence[Scenario], workers: int = 1,
                   cache: Optional[ResultCache] = None,
                   progress: Optional[Callable[[str], None]] = None,
-                  mode: str = "vectorized", probe=None
+                  mode: str = "vectorized", probe=None,
+                  backend: str = "local", remote=None
                   ) -> Tuple[List[dict], SweepStats]:
     """One-call convenience wrapper around ``SweepRunner``."""
     return SweepRunner(cache=cache, workers=workers, mode=mode,
-                       probe=probe).run(scenarios, progress)
+                       probe=probe, backend=backend,
+                       remote=remote).run(scenarios, progress)

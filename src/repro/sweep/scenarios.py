@@ -742,14 +742,16 @@ SWEEPS: Dict[str, SweepDef] = {
 def run_sweep(name: str, smoke: bool = False,
               n_requests: Optional[int] = None, workers: int = 1,
               cache=None, progress=None, mode: str = "vectorized",
-              probe=None):
+              probe=None, backend: str = "local", remote=None):
     """Expand + execute one named sweep.
 
     Returns ``(records, stats, derived)``. ``cache`` follows
     ``runner.SweepRunner`` semantics (None disables memoization);
-    ``mode`` selects the execution backend (both are bit-identical);
-    ``probe`` attaches a ``repro.obs.Probe`` to executed scenarios
-    (forces serial execution, see ``SweepRunner``).
+    ``mode`` selects the execution mode (both numpy modes are
+    bit-identical); ``probe`` attaches a ``repro.obs.Probe`` to
+    executed scenarios (forces serial execution, see ``SweepRunner``);
+    ``backend="remote"`` fans trace groups out to detached workers
+    over a shared-filesystem queue (``repro.sweep.remote``).
     """
     from repro.sweep.runner import SweepRunner
     if name not in SWEEPS:
@@ -757,6 +759,6 @@ def run_sweep(name: str, smoke: bool = False,
     sweep = SWEEPS[name]
     scenarios = sweep.build(smoke, n_requests=n_requests)
     records, stats = SweepRunner(cache=cache, workers=workers,
-                                 mode=mode, probe=probe).run(scenarios,
-                                                             progress)
+                                 mode=mode, probe=probe, backend=backend,
+                                 remote=remote).run(scenarios, progress)
     return records, stats, sweep.derive(records)

@@ -42,6 +42,30 @@ from repro.fleet.config import FleetConfig
 from repro.sweep.grid import Scenario
 
 
+def estimate_trace_cost(sc: Scenario) -> float:
+    """Estimated event-loop stage count for one scenario's trace —
+    the scheduling weight for balanced shard/worker packing, not a
+    wall-clock prediction. Each request contributes one prefill stage
+    plus its decode steps (~avg_len / (1 + pd_ratio) under the
+    prefill:decode token-ratio convention); fleet scenarios scale by
+    site count (each site drives its own loop over its share)."""
+    cfg = sc.cfg
+    wl = cfg.workload
+    avg_len = 0.5 * (wl.min_len + wl.max_len)
+    decode_per_req = avg_len / (1.0 + max(wl.pd_ratio, 1e-9))
+    stages = wl.n_requests * (1.0 + decode_per_req)
+    if isinstance(cfg, FleetConfig):
+        stages *= max(1, len(cfg.sites))
+    return max(stages, 1.0)
+
+
+def estimate_group_cost(scenarios: Sequence[Scenario]) -> float:
+    """A trace group's estimated cost: one shared event loop plus a
+    small per-scenario stacked-pass/record term. All members share one
+    config digest, so the trace estimate comes from the first."""
+    return estimate_trace_cost(scenarios[0]) + 0.1 * len(scenarios)
+
+
 def group_by_trace(scenarios: Sequence[Scenario]) -> List[List[int]]:
     """Order-preserving partition of scenario indices into groups that
     share one simulation trace, keyed by ``Scenario.trace_key`` (the

@@ -292,3 +292,86 @@ def test_jax_backend_parity_all_paper_models(name):
             np.testing.assert_allclose(
                 np.asarray(getattr(jx, f)), np.asarray(getattr(ref, f)),
                 rtol=JAX_BACKEND_RTOL, err_msg=f"{name} {dev} {f}")
+
+
+# --------------------------------------------------------------------------
+# multi-device sharded dispatch + persistent compilation cache
+# --------------------------------------------------------------------------
+
+_SHARDED_DISPATCH_SCRIPT = """
+import json, os
+import jax
+assert jax.local_device_count() == 2, jax.local_device_count()
+from repro.sweep import SWEEPS, SweepRunner
+from repro.sweep.device import (DEVICE_MODE_RTOL, execute_device_grid,
+                                records_max_rel_err)
+scenarios = SWEEPS["fig4"].build(True)
+recs, dstats = execute_device_grid(scenarios)
+ref, _ = SweepRunner(cache=None, mode="event_loop").run(scenarios)
+print(json.dumps({"devices": dstats.devices,
+                  "err": records_max_rel_err(recs, ref),
+                  "rtol": DEVICE_MODE_RTOL}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_dispatch_across_two_host_devices():
+    """With 2 local devices the padded group axis shards (D, G/D) via
+    pmap; records stay within the same DEVICE_MODE_RTOL contract as
+    the single-device program. XLA device-count forcing must precede
+    jax init, hence the subprocess."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.update({"JAX_PLATFORMS": "cpu",
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+                "REPRO_JAX_CACHE_DIR": "off"})
+    out = subprocess.run([sys.executable, "-c", _SHARDED_DISPATCH_SCRIPT],
+                         env=env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == 2
+    assert res["err"] <= res["rtol"]
+
+
+_PERSIST_CACHE_SCRIPT = """
+import os, sys
+from repro.sweep import SWEEPS
+from repro.sweep.device import execute_device_grid
+execute_device_grid(SWEEPS["fig4"].build(True))
+root = os.environ["REPRO_JAX_CACHE_DIR"]
+n = sum(len(fs) for _, _, fs in os.walk(root))
+sys.exit(0 if n > 0 else 3)
+"""
+
+
+@pytest.mark.slow
+def test_persistent_compile_cache_populates(tmp_path):
+    """REPRO_JAX_CACHE_DIR points jax's persistent compilation cache
+    at an on-disk directory so repeat processes skip the device
+    program's XLA compile; the dispatch must write entries there."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.update({"JAX_PLATFORMS": "cpu",
+                "REPRO_JAX_CACHE_DIR": str(tmp_path / "jax_cache")})
+    out = subprocess.run([sys.executable, "-c", _PERSIST_CACHE_SCRIPT],
+                         env=env, capture_output=True, text=True)
+    assert out.returncode == 0, (out.returncode, out.stderr)
+
+
+def test_persistent_cache_env_off_disables(monkeypatch):
+    """'off' (and empty) values disable persistence without touching
+    jax config — the spans tests rely on a cold compile per process."""
+    from repro.sweep import device as dev
+
+    monkeypatch.setattr(dev, "_PERSIST_CONFIGURED", False)
+    monkeypatch.setenv(dev.ENV_JAX_CACHE_DIR, "off")
+    import jax
+    before = jax.config.jax_compilation_cache_dir
+    dev._maybe_persistent_cache()
+    assert jax.config.jax_compilation_cache_dir == before

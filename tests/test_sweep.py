@@ -175,3 +175,52 @@ def test_seed_lives_in_config_not_execution_order():
     a2, b2 = spec.expand()
     assert (a.cfg.workload.seed, b.cfg.workload.seed) == \
            (a2.cfg.workload.seed, b2.cfg.workload.seed)
+
+
+def test_memo_eviction_is_lru(tmp_path):
+    """The in-process memo evicts least-recently-used, so a long-lived
+    worker keeps hot keys resident past the cap instead of freezing
+    the first insertions (the old behavior dropped everything)."""
+    cache = ResultCache(tmp_path / "cache")
+    cache._MEMO_CAP = 3
+    for k in ("k0", "k1", "k2"):
+        cache.put(k, {"key": k, "metrics": {}})
+    assert list(cache._memo) == ["k0", "k1", "k2"]
+    cache.get("k0")                       # touch: k0 becomes most recent
+    cache.put("k3", {"key": "k3", "metrics": {}})   # evicts k1, not k0
+    assert list(cache._memo) == ["k2", "k0", "k3"]
+    # k1 still serves from disk (authoritative) and re-enters the memo
+    c0 = dict(cache.counters)
+    assert cache.get("k1")["key"] == "k1"
+    assert cache.counters["disk"] == c0["disk"] + 1
+    assert "k1" in cache._memo and "k2" not in cache._memo
+
+
+def test_memo_cap_holds_under_churn(tmp_path):
+    cache = ResultCache(tmp_path / "cache")
+    cache._MEMO_CAP = 4
+    for i in range(20):
+        cache.put(f"key{i:02d}", {"key": f"key{i:02d}", "metrics": {}})
+    assert len(cache._memo) == 4
+    assert list(cache._memo) == ["key16", "key17", "key18", "key19"]
+
+
+def test_peak_rss_includes_pool_children():
+    """The summary's peak-RSS figure must reflect the process *tree*:
+    a child that allocates far more than the parent shows up via
+    RUSAGE_CHILDREN once reaped."""
+    import subprocess
+    import sys
+
+    from repro.sweep.runner import _peak_rss_mb
+
+    before = _peak_rss_mb()
+    # ~300 MB in a child; bytearray keeps it resident, touch every page
+    subprocess.run(
+        [sys.executable, "-c",
+         "b = bytearray(300 * 1024 * 1024)\n"
+         "b[::4096] = b'x' * len(b[::4096])"],
+        check=True)
+    after = _peak_rss_mb()
+    assert after >= before
+    assert after >= 250.0     # the child's footprint, not the parent's
